@@ -1,0 +1,57 @@
+"""NodeManager elasticity (§8.2): utilization under a shifting load trace,
+with and without elastic reassignment."""
+from __future__ import annotations
+
+from typing import List, Tuple
+
+from repro.cluster import NodeManager, StageSpec, WorkflowSpec
+
+
+def _simulate(elastic: bool, steps: int = 40):
+    nm = NodeManager(scale_threshold=0.85, steal_below=0.6, window=4)
+    nm.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("prep", exec_time_s=1.0),
+        StageSpec("diffusion", exec_time_s=12.0),
+        StageSpec("decode", exec_time_s=2.0),
+    ]))
+    alloc = {"prep": 3, "diffusion": 4, "decode": 2}
+    idx = 0
+    for stage, n in alloc.items():
+        for _ in range(n):
+            nm.register_instance(f"i{idx}")
+            nm.assign(f"i{idx}", stage)
+            idx += 1
+    for _ in range(3):
+        nm.register_instance(f"i{idx}")  # idle pool
+        idx += 1
+
+    # offered load (requests/s) ramps on diffusion
+    demand = {"prep": 1.0, "diffusion": 12.0, "decode": 2.0}  # work-s per req
+    utils_hist = []
+    rate = 0.25
+    for t in range(steps):
+        rate = 0.25 + 0.35 * min(t / 10.0, 1.0)  # ramp up
+        total_util = []
+        for stage in alloc:
+            n = len(nm.stage_instances(stage))
+            u = min(rate * demand[stage] / max(n, 1), 1.0)
+            for name in nm.stage_instances(stage):
+                nm.report_utilization(name, u)
+            total_util.append(u)
+        utils_hist.append(max(total_util))
+        if elastic:
+            nm.rebalance()
+    n_diff = len(nm.stage_instances("diffusion"))
+    saturated = sum(1 for u in utils_hist if u >= 0.999)
+    return n_diff, saturated, sum(utils_hist) / len(utils_hist)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    for elastic in (False, True):
+        n_diff, sat, avg = _simulate(elastic)
+        tag = "elastic" if elastic else "static"
+        rows.append((f"nm_{tag}", avg,
+                     f"diffusion_instances={n_diff};saturated_steps={sat};"
+                     f"avg_peak_util={avg:.3f}"))
+    return rows

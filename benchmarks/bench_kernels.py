@@ -1,0 +1,67 @@
+"""Kernel micro-benchmarks: oracle-vs-kernel agreement + reference-path
+wall time (kernel wall time on CPU is interpret-mode and not meaningful;
+the dry-run roofline covers TPU projections)."""
+from __future__ import annotations
+
+import time
+from typing import List, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_wkv import wkv6
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+
+def _time(fn, *args, n=5):
+    fn(*args)[0] if isinstance(fn(*args), tuple) else fn(*args)
+    t0 = time.perf_counter()
+    for _ in range(n):
+        out = fn(*args)
+        jax.tree.map(lambda x: x.block_until_ready(), out)
+    return (time.perf_counter() - t0) / n
+
+
+def run() -> List[Tuple[str, float, str]]:
+    rows = []
+    key = jax.random.PRNGKey(0)
+
+    # flash attention
+    b, s, h, d = 2, 512, 4, 64
+    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (b, s, h, d)) for i in range(3))
+    t_ref = _time(jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True)), q, k, v)
+    out = flash_attention(q, k, v, causal=True)
+    err = float(jnp.abs(out - attention_ref(q, k, v, causal=True)).max())
+    rows.append(("kernel_flash_attention", t_ref * 1e6,
+                 f"ref_us={t_ref*1e6:.0f};max_err_vs_oracle={err:.2e}"))
+
+    # wkv6
+    b, t, hh, kk = 2, 256, 4, 64
+    r = jax.random.normal(key, (b, t, hh, kk))
+    kx = jax.random.normal(jax.random.PRNGKey(1), (b, t, hh, kk)) * 0.3
+    vx = jax.random.normal(jax.random.PRNGKey(2), (b, t, hh, kk))
+    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(3), (b, t, hh, kk))) * 0.5 + 0.45
+    u = jax.random.normal(jax.random.PRNGKey(4), (hh, kk)) * 0.1
+    s0 = jnp.zeros((b, hh, kk, kk))
+    t_ref = _time(jax.jit(lambda *a: wkv6_ref(*a)), r, kx, vx, w, u, s0)
+    y, _ = wkv6(r, kx, vx, w, u, s0)
+    yr, _ = wkv6_ref(r, kx, vx, w, u, s0)
+    rows.append(("kernel_wkv6", t_ref * 1e6,
+                 f"ref_us={t_ref*1e6:.0f};max_err={float(jnp.abs(y-yr).max()):.2e}"))
+
+    # decode attention
+    b, s, h, kvh, d = 4, 2048, 8, 4, 64
+    q = jax.random.normal(key, (b, h, d))
+    kc = jax.random.normal(jax.random.PRNGKey(5), (b, s, kvh, d))
+    vc = jax.random.normal(jax.random.PRNGKey(6), (b, s, kvh, d))
+    t_ref = _time(jax.jit(lambda *a: decode_attention_ref(*a)), q, kc, vc, jnp.int32(s - 1))
+    out = decode_attention(q, kc, vc, jnp.int32(s - 1))
+    err = float(jnp.abs(out - decode_attention_ref(q, kc, vc, jnp.int32(s - 1))).max())
+    rows.append(("kernel_decode_attention", t_ref * 1e6,
+                 f"ref_us={t_ref*1e6:.0f};max_err={err:.2e}"))
+    return rows

@@ -1,0 +1,60 @@
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+
+Reads experiments/dryrun/*.json and emits the three-term roofline per
+(arch x shape x mesh): compute / memory / collective seconds per chip,
+dominant term, MODEL_FLOPS / HLO_FLOPS ratio, fits-HBM.
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+from typing import List, Tuple
+
+DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+def load_all(mesh: str = "16x16"):
+    rows = []
+    for f in sorted(DRYRUN_DIR.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("mesh") == mesh and "__" not in f.stem.replace(
+            f"{d['arch']}__{d['shape']}__{d['mesh']}", ""
+        ):
+            rows.append(d)
+    return rows
+
+
+def markdown_table(mesh: str = "16x16") -> str:
+    rows = load_all(mesh)
+    hdr = ("| arch | shape | compute_s | memory_s | collective_s | dominant | "
+           "useful_flops | peak GB | fits |\n|---|---|---|---|---|---|---|---|---|")
+    lines = [hdr]
+    for d in rows:
+        m = d["memory"]
+        lines.append(
+            f"| {d['arch']} | {d['shape']} | {d['compute_s']:.3e} | "
+            f"{d['memory_s']:.3e} | {d['collective_s']:.3e} | {d['dominant']} | "
+            f"{d['useful_flops_ratio']:.2f} | {m['peak_bytes']/1e9:.2f} | "
+            f"{'Y' if m['fits_hbm'] else 'N'} |"
+        )
+    return "\n".join(lines)
+
+
+def run() -> List[Tuple[str, float, str]]:
+    out = []
+    for mesh in ("16x16", "2x16x16"):
+        rows = load_all(mesh)
+        if not rows:
+            continue
+        fits = sum(1 for d in rows if d["memory"]["fits_hbm"])
+        dom = {}
+        for d in rows:
+            dom[d["dominant"]] = dom.get(d["dominant"], 0) + 1
+        out.append((f"roofline_{mesh}", float(len(rows)),
+                    f"cases={len(rows)};fits={fits};dominant=" +
+                    ",".join(f"{k}:{v}" for k, v in sorted(dom.items()))))
+    return out
+
+
+if __name__ == "__main__":
+    print(markdown_table("16x16"))

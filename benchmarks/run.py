@@ -1,0 +1,42 @@
+"""Benchmark harness — one function per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV rows.
+
+    PYTHONPATH=src python -m benchmarks.run [--only transport,...]
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+import traceback
+
+SUITES = ("transport", "disaggregation", "pipelining", "elastic",
+          "kernels", "e2e_serving", "roofline")
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--only", default="", help="comma-separated suite names")
+    args = ap.parse_args()
+    only = set(filter(None, args.only.split(",")))
+
+    failures = 0
+    print("name,us_per_call,derived")
+    for suite in SUITES:
+        if only and suite not in only:
+            continue
+        try:
+            if suite == "roofline":
+                mod = __import__("benchmarks.roofline", fromlist=["run"])
+            else:
+                mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
+            for name, us, derived in mod.run():
+                print(f"{name},{us:.3f},{derived}", flush=True)
+        except Exception:
+            failures += 1
+            print(f"{suite},NaN,FAILED")
+            traceback.print_exc(file=sys.stderr)
+    return failures
+
+
+if __name__ == "__main__":
+    sys.exit(main())

@@ -1,0 +1,49 @@
+"""Quickstart: the OnePiece core in ~60 lines.
+
+  1. one-sided RDMA fabric + deadlock-free double-ring buffer
+  2. workflow messages with dynamic tensor payloads
+  3. a two-stage workflow set executing end to end
+
+Run:  PYTHONPATH=src python examples/quickstart.py
+"""
+import numpy as np
+
+from repro.core import (DoubleRingBuffer, RdmaFabric, RingProducer,
+                        WorkflowMessage, plan_chain)
+from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
+
+# --- 1. the double-ring buffer over one-sided RDMA ---------------------------
+fabric = RdmaFabric()
+ring = DoubleRingBuffer(fabric, "demo", n_slots=64, buf_size=1 << 16)
+alice, bob = RingProducer(ring, 1), RingProducer(ring, 2)
+
+alice.append(b"hello from alice")
+bob.append(b"hi from bob " + b"x" * 1000)   # variable sizes, same ring
+print("consumer sees:", ring.poll(), "... and", len(ring.poll()), "bytes")
+
+# --- 2. messages carry arbitrary dynamic payloads (the anti-NCCL case) ------
+msg = WorkflowMessage.new(app_id=7, payload={
+    "latents": np.random.randn(2, 8, 8).astype(np.float32),
+    "prompt": "a tiny video of a cat",
+})
+alice.append(msg.pack())
+back = WorkflowMessage.unpack(ring.poll())
+print("roundtrip uid:", back.uid_hex[:8], "payload keys:", sorted(back.payload))
+
+# --- 3. a workflow set: proxy -> stages -> replicated database --------------
+ws = WorkflowSet("quick")
+ws.register_workflow(WorkflowSpec(1, "square-add", [
+    StageSpec("square", fn=lambda p: p * p, exec_time_s=0.001),
+    StageSpec("add_one", fn=lambda p: p + 1, exec_time_s=0.002),
+]))
+ws.add_instance("sq0", stage="square")
+for i in range(plan_chain([0.001, 0.002])[1]):   # Theorem-1 instance count
+    ws.add_instance(f"ad{i}", stage="add_one")
+proxy = ws.add_proxy("p0")
+
+with ws:
+    uid = proxy.submit(1, np.arange(4.0, dtype=np.float32))
+    print("workflow result:", proxy.wait_result(uid, timeout_s=5))
+
+print("fabric:", fabric.stats.total_ops, "one-sided verbs,",
+      ws.fabric.stats.total_ops, "in the workflow set")

@@ -1,0 +1,15 @@
+"""End-to-end driver (the paper's serving scenario): a full OnePiece
+Workflow Set runs the Wan-style image-to-video pipeline for a batch of
+concurrent requests — Theorem-1 instance planning, ring-buffer RDMA
+transport, fast-reject admission, replicated transient storage.
+
+Run:  PYTHONPATH=src python examples/serve_aigc.py [--requests 6]
+"""
+import sys
+
+sys.argv = [sys.argv[0]] + (sys.argv[1:] or ["--requests", "6"])
+
+from repro.launch.serve import main
+
+if __name__ == "__main__":
+    raise SystemExit(main())

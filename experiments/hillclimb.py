@@ -1,0 +1,67 @@
+"""§Perf hillclimb driver: run a dry-run variant and print the delta vs the
+recorded baseline JSON.
+
+    PYTHONPATH=src python experiments/hillclimb.py --arch granite-moe-3b-a800m \
+        --shape train_4k --cfg '{"attn_causal_skip": true}' --tag causal_skip
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import pathlib
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+HERE = pathlib.Path(__file__).resolve().parent
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--cfg", default=None, help="JSON ModelConfig overrides")
+    ap.add_argument("--rules", default=None, help="JSON sharding-rule overrides")
+    ap.add_argument("--microbatches", type=int, default=None)
+    ap.add_argument("--tag", required=True)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    from repro.launch.dryrun_lib import run_case
+
+    mesh_tag = "2x16x16" if args.multi_pod else "16x16"
+    base_f = HERE / "dryrun" / f"{args.arch}__{args.shape}__{mesh_tag}.json"
+    base = json.loads(base_f.read_text()) if base_f.exists() else None
+
+    stats = run_case(
+        args.arch, args.shape, multi_pod=args.multi_pod,
+        rule_overrides=json.loads(args.rules) if args.rules else None,
+        cfg_overrides=json.loads(args.cfg) if args.cfg else None,
+        microbatches=args.microbatches,
+    )
+    out = HERE / "perf" / f"{args.arch}__{args.shape}__{mesh_tag}__{args.tag}.json"
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps(stats, indent=2))
+
+    def row(d):
+        m = d["memory"]
+        return (d["compute_s"], d["memory_s"], d["collective_s"],
+                m["peak_bytes"] / 1e9, d["useful_flops_ratio"])
+
+    print(f"variant [{args.tag}]: compute={stats['compute_s']:.3e} "
+          f"memory={stats['memory_s']:.3e} collective={stats['collective_s']:.3e} "
+          f"peak={stats['memory']['peak_bytes']/1e9:.2f}GB "
+          f"useful={stats['useful_flops_ratio']:.2f} fits={stats['memory']['fits_hbm']}")
+    if base:
+        bc, bm, bl, bp, bu = row(base)
+        vc, vm, vl, vp, vu = row(stats)
+        print(f"vs baseline: compute {bc:.3e}->{vc:.3e} ({vc/bc-1:+.1%}) | "
+              f"memory {bm:.3e}->{vm:.3e} ({vm/bm-1:+.1%}) | "
+              f"collective {bl:.3e}->{vl:.3e} ({vl/bl-1:+.1%}) | "
+              f"peak {bp:.1f}->{vp:.1f}GB | useful {bu:.2f}->{vu:.2f}")
+    print(f"wrote {out}")
+
+
+if __name__ == "__main__":
+    main()

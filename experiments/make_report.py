@@ -1,0 +1,92 @@
+"""Regenerate the §Dry-run and §Roofline tables of EXPERIMENTS.md from
+experiments/dryrun/*.json.  §Perf is maintained by hand (iteration log).
+
+    PYTHONPATH=src python experiments/make_report.py > /tmp/tables.md
+"""
+from __future__ import annotations
+
+import json
+import pathlib
+import sys
+
+HERE = pathlib.Path(__file__).resolve().parent
+DRYRUN = HERE / "dryrun"
+
+ARCH_ORDER = [
+    "deepseek-67b", "chatglm3-6b", "rwkv6-7b", "internvl2-1b",
+    "granite-moe-3b-a800m", "zamba2-1.2b", "qwen3-1.7b", "gemma3-27b",
+    "deepseek-moe-16b", "whisper-large-v3",
+]
+SHAPE_ORDER = ["train_4k", "prefill_32k", "decode_32k", "long_500k"]
+
+
+def load(mesh):
+    out = {}
+    for f in DRYRUN.glob(f"*__{mesh}.json"):
+        d = json.loads(f.read_text())
+        out[(d["arch"], d["shape"])] = d
+    return out
+
+
+def fmt_bytes(b):
+    return f"{b/1e9:.2f}"
+
+
+def dryrun_table(mesh):
+    data = load(mesh)
+    lines = [
+        f"### Mesh {mesh}",
+        "",
+        "| arch | shape | compile s | peak GB/chip | fits | HLO GFLOP/chip | "
+        "HBM GB/chip (proxy) | collective GB/chip | collectives |",
+        "|---|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = data.get((arch, shape))
+            if d is None:
+                lines.append(f"| {arch} | {shape} | — | — | skip | — | — | — | "
+                             "see DESIGN.md §4 |")
+                continue
+            m = d["memory"]
+            cc = d["collectives"]["count_by_kind"]
+            cstr = " ".join(f"{k}:{int(v)}" for k, v in sorted(cc.items()))
+            lines.append(
+                f"| {arch} | {shape} | {d['compile_s']:.0f} | "
+                f"{m['peak_bytes']/1e9:.2f} | {'Y' if m['fits_hbm'] else 'N*'} | "
+                f"{d['flops_per_chip']/1e9:.0f} | "
+                f"{d['bytes_per_chip']/1e9:.1f} | "
+                f"{d['collective_bytes_per_chip']/1e9:.2f} | {cstr} |"
+            )
+    return "\n".join(lines)
+
+
+def roofline_table(mesh="16x16"):
+    data = load(mesh)
+    lines = [
+        "| arch | shape | compute s | memory s (proxy) | memory s (min) | "
+        "collective s | dominant | MODEL/HLO flops |",
+        "|---|---|---|---|---|---|---|---|",
+    ]
+    for arch in ARCH_ORDER:
+        for shape in SHAPE_ORDER:
+            d = data.get((arch, shape))
+            if d is None:
+                continue
+            min_mem_s = d.get("analytic_min_bytes_per_chip", 0) / 819e9
+            lines.append(
+                f"| {arch} | {shape} | {d['compute_s']:.2e} | "
+                f"{d['memory_s']:.2e} | {min_mem_s:.2e} | "
+                f"{d['collective_s']:.2e} | **{d['dominant']}** | "
+                f"{d['useful_flops_ratio']:.2f} |"
+            )
+    return "\n".join(lines)
+
+
+if __name__ == "__main__":
+    print("## §Dry-run\n")
+    for mesh in ("16x16", "2x16x16"):
+        print(dryrun_table(mesh))
+        print()
+    print("## §Roofline (single-pod 16x16)\n")
+    print(roofline_table())

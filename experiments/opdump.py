@@ -1,0 +1,74 @@
+"""Per-op cost breakdown of a dry-run case — the 'profile' for §Perf.
+
+    PYTHONPATH=src python experiments/opdump.py --arch granite-moe-3b-a800m \
+        --shape train_4k [--rules '{"seq_res": null}'] [--top 25]
+"""
+import os
+os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=512"
+
+import argparse
+import json
+import sys
+
+sys.path.insert(0, os.path.join(os.path.dirname(__file__), "..", "src"))
+
+from repro.launch.dryrun_lib import build_case  # noqa: E402
+from repro.launch.mesh import make_production_mesh  # noqa: E402
+from repro.configs import get_config, get_shape  # noqa: E402
+from repro.launch import hlo_analysis as H  # noqa: E402
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--shape", required=True)
+    ap.add_argument("--rules", default=None)
+    ap.add_argument("--top", type=int, default=25)
+    ap.add_argument("--multi-pod", action="store_true")
+    args = ap.parse_args()
+
+    cfg = get_config(args.arch)
+    mesh = make_production_mesh(multi_pod=args.multi_pod)
+    overrides = json.loads(args.rules) if args.rules else None
+    jf, sds = build_case(cfg, get_shape(args.shape), mesh, overrides)
+    txt = jf.lower(*sds).compile().as_text()
+    comps, entry = H.parse_module(txt)
+    mult = H.compute_multipliers(comps, entry)
+    fb = H._fusion_bodies(comps)
+
+    rows = []
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0:
+            continue
+        for i in c.instrs:
+            flops = H._dot_flops(i, c.table) * m if i.op in ("dot", "convolution") else 0
+            by = 0.0
+            if name not in fb and i.op not in H._SKIP_OPS and i.op != "while":
+                if i.op == "fusion":
+                    by = m * H.fusion_bytes(i, c, comps)
+                elif i.op in H._SLICE_READERS:
+                    by = m * 2 * i.result_bytes
+                elif i.op == "dynamic-update-slice":
+                    upd = c.table.get(i.operand_refs[1]) if len(i.operand_refs) > 1 else None
+                    by = m * 2 * (upd.result_bytes if upd else i.result_bytes)
+                else:
+                    by = m * (i.result_bytes + sum(
+                        c.table[r].result_bytes for r in i.operand_refs if r in c.table))
+            meta = ""
+            mm = __import__("re").search(r'op_name="([^"]*)"', i.line)
+            if mm:
+                meta = mm.group(1)[-70:]
+            rows.append((by, flops, m, i.op, meta))
+
+    print("=== top by HBM bytes (per chip) ===")
+    for by, fl, m, op, meta in sorted(rows, key=lambda r: -r[0])[: args.top]:
+        print(f"{by/1e9:9.2f} GB x{m:7.0f} {op:22s} {meta}")
+    print("\n=== top by FLOPs (per chip) ===")
+    for by, fl, m, op, meta in sorted(rows, key=lambda r: -r[1])[: args.top]:
+        if fl:
+            print(f"{fl/1e12:9.3f} TF x{m:7.0f} {op:22s} {meta}")
+
+
+if __name__ == "__main__":
+    main()

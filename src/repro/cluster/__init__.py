@@ -1,0 +1,35 @@
+"""OnePiece cluster layer: NodeManager orchestration, Paxos election,
+proxies with fast-reject, workflow instances, transient databases,
+regionally-autonomous Workflow Sets.
+"""
+from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
+from repro.cluster.instance import ResultDeliver, WorkflowInstance
+from repro.cluster.node_manager import (
+    InstanceInfo,
+    NMCluster,
+    NodeManager,
+    StageSpec,
+    WorkflowSpec,
+)
+from repro.cluster.paxos import Acceptor, LossyNetwork, Proposer, elect_primary
+from repro.cluster.proxy import Proxy, Rejected
+from repro.cluster.workflow_set import MultiSetFrontend, WorkflowSet
+
+__all__ = [
+    "Acceptor",
+    "DatabaseInstance",
+    "InstanceInfo",
+    "LossyNetwork",
+    "MultiSetFrontend",
+    "NMCluster",
+    "NodeManager",
+    "Proposer",
+    "Proxy",
+    "Rejected",
+    "ReplicatedDatabase",
+    "ResultDeliver",
+    "StageSpec",
+    "WorkflowSet",
+    "WorkflowSpec",
+    "elect_primary",
+]

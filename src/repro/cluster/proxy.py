@@ -1,0 +1,90 @@
+"""Proxy (§3.2): client entry point — UID assignment, fast-reject admission,
+entrance-stage injection over RDMA, result retrieval by UID.
+"""
+from __future__ import annotations
+
+import threading
+import time
+import uuid as uuidlib
+from typing import Any, Dict, Optional
+
+from repro.cluster.database import ReplicatedDatabase
+from repro.cluster.node_manager import NodeManager
+from repro.core.messaging import WorkflowMessage
+from repro.core.rdma import RdmaFabric
+from repro.core.request_monitor import RequestMonitor
+from repro.core.ring_buffer import DoubleRingBuffer, RingProducer
+
+
+class Rejected(Exception):
+    """Fast-reject: client should retry against another Workflow Set."""
+
+
+class Proxy:
+    def __init__(
+        self,
+        name: str,
+        fabric: RdmaFabric,
+        nm: NodeManager,
+        database: ReplicatedDatabase,
+        buffers: Dict[str, DoubleRingBuffer],
+        *,
+        monitor: Optional[RequestMonitor] = None,
+    ):
+        self.name = name
+        self.fabric = fabric
+        self.nm = nm
+        self.database = database
+        self.buffers = buffers
+        self.monitor = monitor
+        self._producers: Dict[str, RingProducer] = {}
+        self._rr = 0
+        self._lock = threading.Lock()
+        nm.register_instance(name, role="proxy")
+
+    def _entrance_producer(self, target: str) -> RingProducer:
+        with self._lock:
+            if target not in self._producers:
+                self._producers[target] = RingProducer(
+                    self.buffers[target], abs(hash(self.name)) % (1 << 20),
+                    client=self.name,
+                )
+            return self._producers[target]
+
+    def submit(self, app_id: int, payload: Any) -> str:
+        """Admit (or fast-reject) a generation request; returns the UID the
+        client later polls with."""
+        if self.monitor is not None and not self.monitor.try_admit():
+            raise Rejected(f"proxy {self.name} over admissible rate")
+        wf = self.nm.workflows[app_id]
+        entrance = wf.stage_names()[0]
+        instances = self.nm.stage_instances(entrance)
+        if not instances:
+            raise Rejected(f"no instances for entrance stage {entrance}")
+        msg = WorkflowMessage.new(app_id=app_id, payload=payload, stage=0)
+        with self._lock:
+            self._rr += 1
+            target = instances[self._rr % len(instances)]
+        prod = self._entrance_producer(target)
+        for _ in range(64):
+            if prod.append(msg.pack()):
+                return msg.uid_hex
+            time.sleep(0.0005)
+        raise Rejected("entrance ring full")
+
+    def poll_result(self, uid: str) -> Optional[Any]:
+        return self.database.fetch(uid)
+
+    def wait_result(self, uid: str, timeout_s: float = 10.0,
+                    interval_s: float = 0.002) -> Any:
+        deadline = time.monotonic() + timeout_s
+        while time.monotonic() < deadline:
+            v = self.poll_result(uid)
+            if v is not None:
+                return v
+            time.sleep(interval_s)
+        raise TimeoutError(f"no result for {uid}")
+
+    def complete(self) -> None:
+        if self.monitor is not None:
+            self.monitor.complete()

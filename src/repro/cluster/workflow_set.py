@@ -1,0 +1,100 @@
+"""Workflow Set (§3.1): one regionally-autonomous set of proxies, workflow
+instances and databases over a shared RDMA fabric, able to execute complete
+workflows independently.  Multiple sets + random request spreading give the
+cross-set balancing and fault isolation of §3.
+"""
+from __future__ import annotations
+
+import random
+import threading
+from typing import Any, Dict, List, Optional, Sequence
+
+from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
+from repro.cluster.instance import WorkflowInstance
+from repro.cluster.node_manager import NodeManager, StageSpec, WorkflowSpec
+from repro.cluster.proxy import Proxy, Rejected
+from repro.core.rdma import RdmaFabric
+from repro.core.request_monitor import RequestMonitor
+from repro.core.ring_buffer import DoubleRingBuffer
+
+
+class WorkflowSet:
+    def __init__(self, name: str, *, n_databases: int = 2,
+                 nm: Optional[NodeManager] = None):
+        self.name = name
+        self.fabric = RdmaFabric()
+        self.nm = nm or NodeManager()
+        self.buffers: Dict[str, DoubleRingBuffer] = {}
+        self.instances: Dict[str, WorkflowInstance] = {}
+        self.db_instances = [
+            DatabaseInstance(f"{name}.db{i}") for i in range(n_databases)
+        ]
+        for dbi in self.db_instances:
+            self.nm.register_instance(dbi.name, role="database")
+        self.database = ReplicatedDatabase(self.db_instances)
+        self.proxies: List[Proxy] = []
+        self._started = False
+
+    # ------------------------------------------------------------ assembly
+    def add_instance(self, name: str, *, n_workers: int = 1, mode: str = "IM",
+                     stage: Optional[str] = None, **kw) -> WorkflowInstance:
+        inst = WorkflowInstance(
+            f"{self.name}.{name}", self.fabric, self.nm,
+            n_workers=n_workers, mode=mode, database=self.database,
+            buffers=self.buffers, **kw,
+        )
+        self.instances[inst.name] = inst
+        if stage is not None:
+            self.nm.assign(inst.name, stage)
+        return inst
+
+    def add_proxy(self, name: str, *, monitor: Optional[RequestMonitor] = None) -> Proxy:
+        p = Proxy(f"{self.name}.{name}", self.fabric, self.nm, self.database,
+                  self.buffers, monitor=monitor)
+        self.proxies.append(p)
+        return p
+
+    def register_workflow(self, wf: WorkflowSpec) -> None:
+        self.nm.register_workflow(wf)
+
+    # ----------------------------------------------------------- lifecycle
+    def start(self) -> None:
+        for inst in self.instances.values():
+            inst.start()
+        self._started = True
+
+    def stop(self) -> None:
+        for inst in self.instances.values():
+            inst.stop()
+        self._started = False
+
+    def __enter__(self) -> "WorkflowSet":
+        self.start()
+        return self
+
+    def __exit__(self, *exc) -> None:
+        self.stop()
+
+
+class MultiSetFrontend:
+    """Client-side spreading across Workflow Sets (§3): submit to a random
+    set; on fast-reject, try another — failures stay isolated per set."""
+
+    def __init__(self, sets: Sequence[WorkflowSet], seed: int = 0):
+        self.sets = list(sets)
+        self.rng = random.Random(seed)
+
+    def submit(self, app_id: int, payload: Any) -> tuple:
+        order = self.rng.sample(range(len(self.sets)), len(self.sets))
+        last_err: Optional[Exception] = None
+        for i in order:
+            ws = self.sets[i]
+            if not ws.proxies:
+                continue
+            proxy = self.rng.choice(ws.proxies)
+            try:
+                return ws, proxy.submit(app_id, payload)
+            except Rejected as e:
+                last_err = e
+                continue
+        raise last_err or Rejected("no sets available")

@@ -1,0 +1,17 @@
+"""chatglm3-6b [dense] — RoPE 2d, GQA [arXiv:2406.12793]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="chatglm3-6b",
+    family="dense",
+    num_layers=28,
+    d_model=4096,
+    num_heads=32,
+    num_kv_heads=2,
+    head_dim=128,
+    d_ff=13696,
+    vocab_size=65_024,
+    rope_2d=True,          # rotary applied to half the head dim
+    rope_theta=10_000.0,
+    source="arXiv:2406.12793",
+)

@@ -1,0 +1,22 @@
+"""deepseek-moe-16b [moe] — 2 shared + 64 routed top-6, fine-grained
+[arXiv:2401.06066].  Layer 0 is dense (as in the source architecture).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="deepseek-moe-16b",
+    family="moe",
+    num_layers=28,
+    d_model=2048,
+    num_heads=16,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=1408,              # per routed expert
+    vocab_size=102_400,
+    num_experts=64,
+    num_shared_experts=2,
+    top_k=6,
+    first_dense_layers=1,
+    dense_ff=11264,         # ~ (top_k + shared) * d_ff
+    source="arXiv:2401.06066",
+)

@@ -1,0 +1,25 @@
+"""gemma3-27b [dense] — 5:1 local:global attention, 128k context
+[hf:google/gemma-3-1b-pt].
+
+Local layers use a 1024-token sliding window (sliding-window KV cache), so
+this dense arch qualifies for the long_500k decode shape; the 1-in-6 global
+layers keep a full cache, context-parallel sharded over the `data` axis.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="gemma3-27b",
+    family="dense",
+    num_layers=62,
+    d_model=5376,
+    num_heads=32,
+    num_kv_heads=16,
+    head_dim=128,
+    d_ff=21504,
+    vocab_size=262_144,
+    sliding_window=1024,
+    local_global_pattern=(5, 1),
+    qk_norm=True,
+    rope_theta=1_000_000.0,
+    source="hf:google/gemma-3-1b-pt",
+)

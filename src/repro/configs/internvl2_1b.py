@@ -1,0 +1,22 @@
+"""internvl2-1b [vlm] — InternViT + InternLM2 backbone [arXiv:2404.16821].
+
+The ViT vision encoder + MLP projector is a STUB per the assignment:
+``input_specs()`` provides precomputed patch embeddings of shape
+[batch, frontend_tokens, d_model]; this config is the language decoder that
+consumes them interleaved with text tokens.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="internvl2-1b",
+    family="vlm",
+    num_layers=24,
+    d_model=896,
+    num_heads=14,
+    num_kv_heads=2,
+    head_dim=64,
+    d_ff=4864,
+    vocab_size=151_655,
+    frontend_tokens=256,   # ViT patch embeddings per image (stub)
+    source="arXiv:2404.16821",
+)

@@ -1,0 +1,15 @@
+"""rwkv6-7b [ssm] — Finch, data-dependent decay, attention-free [arXiv:2404.05892]."""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="rwkv6-7b",
+    family="ssm",
+    num_layers=32,
+    d_model=4096,
+    num_heads=64,          # WKV heads, head_size = 64
+    head_dim=64,
+    d_ff=14336,
+    vocab_size=65_536,
+    attention_free=True,
+    source="arXiv:2404.05892",
+)

@@ -1,0 +1,26 @@
+"""whisper-large-v3 [audio] — encoder-decoder, conv frontend STUB
+[arXiv:2212.04356].
+
+The mel-spectrogram + conv feature extractor is a stub per the assignment:
+``input_specs()`` provides precomputed frame embeddings [batch, 1500, d_model]
+for the encoder.  Decode shapes lower the decoder's serve_step (self-attn
+cache = shape seq_len, cross-attention to the 1500 encoder frames).
+long_500k is skipped (enc-dec decoder context is architecturally bounded).
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="whisper-large-v3",
+    family="audio",
+    num_layers=32,          # decoder layers
+    encoder_layers=32,
+    d_model=1280,
+    num_heads=20,
+    num_kv_heads=20,
+    head_dim=64,
+    d_ff=5120,
+    vocab_size=51_866,
+    cross_attention=True,
+    frontend_tokens=1500,   # encoder frames after the (stubbed) conv frontend
+    source="arXiv:2212.04356",
+)

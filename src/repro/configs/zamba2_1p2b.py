@@ -1,0 +1,25 @@
+"""zamba2-1.2b [hybrid] — Mamba2 backbone + shared attention blocks
+[arXiv:2411.15242].
+
+The Zamba2 design reuses ONE transformer block's weights at several points in
+the Mamba2 stack; we apply the shared attention+MLP block after every
+``hybrid_attn_every`` SSM layers.
+"""
+from repro.configs.base import ModelConfig
+
+CONFIG = ModelConfig(
+    name="zamba2-1.2b",
+    family="hybrid",
+    num_layers=38,          # Mamba2 layers
+    d_model=2048,
+    num_heads=32,           # shared attention block heads
+    num_kv_heads=32,
+    head_dim=64,
+    d_ff=8192,              # shared block MLP width
+    vocab_size=32_000,
+    ssm_state=64,
+    ssm_head_dim=64,
+    ssm_expand=2,
+    hybrid_attn_every=6,
+    source="arXiv:2411.15242",
+)

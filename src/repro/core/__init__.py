@@ -1,0 +1,41 @@
+"""OnePiece core: the paper's primary contributions.
+
+  * rdma            — simulated one-sided RDMA fabric (read/write/CAS/FAA)
+  * ring_buffer     — deadlock-free multi-producer double-ring buffer (§6.1)
+  * messaging       — workflow message codec, arbitrary dynamic payloads (§4.1)
+  * pipeline_planner— Theorem-1 rate matching (§5)
+  * request_monitor — proxy fast-reject admission control (§3.2, §5)
+"""
+from repro.core.rdma import CostModel, FabricStats, MemoryRegion, RdmaFabric, SimulatedCrash, TcpCostModel
+from repro.core.ring_buffer import CORRUPT, AppendOp, Corrupt, DoubleRingBuffer, RingProducer
+from repro.core.messaging import HEADER_BYTES, WorkflowMessage
+from repro.core.pipeline_planner import (
+    offered_rate,
+    plan_chain,
+    required_instances,
+    simulate_pipeline,
+    steady_state_latency,
+)
+from repro.core.request_monitor import RequestMonitor
+
+__all__ = [
+    "AppendOp",
+    "CORRUPT",
+    "Corrupt",
+    "CostModel",
+    "DoubleRingBuffer",
+    "FabricStats",
+    "HEADER_BYTES",
+    "MemoryRegion",
+    "RdmaFabric",
+    "RequestMonitor",
+    "RingProducer",
+    "SimulatedCrash",
+    "TcpCostModel",
+    "WorkflowMessage",
+    "offered_rate",
+    "plan_chain",
+    "required_instances",
+    "simulate_pipeline",
+    "steady_state_latency",
+]

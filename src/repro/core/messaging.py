@@ -1,0 +1,150 @@
+"""Workflow messages (§4.1): header + arbitrary, dynamically-sized payload.
+
+This is the paper's answer to NCCL limitation L1/L2 — a message can carry
+raw bytes, a single tensor, or a pytree of tensors of shapes unknown to the
+receiver in advance; everything needed to decode travels in the message.
+
+Header fields (Figure 3): UUID, proxy timestamp, application id, stage.
+"""
+from __future__ import annotations
+
+import io
+import json
+import struct
+import time
+import uuid as uuidlib
+from dataclasses import dataclass, field
+from typing import Any, Dict, List, Tuple, Union
+
+import numpy as np
+
+_HDR = struct.Struct("<16sdIIQ")  # uuid, timestamp, app_id, stage, payload_len
+HEADER_BYTES = _HDR.size
+
+Payload = Union[bytes, np.ndarray, Dict[str, Any], List[Any], Tuple[Any, ...], str, int, float, None]
+
+_KIND_BYTES = 0
+_KIND_TENSOR = 1
+_KIND_JSONTREE = 2
+
+
+def _encode_payload(payload: Payload) -> bytes:
+    """Self-describing encoding for arbitrary payload types."""
+    if isinstance(payload, np.generic):  # numpy scalar -> 0-d tensor
+        payload = np.asarray(payload)
+    if isinstance(payload, (bytes, bytearray)):
+        return struct.pack("<B", _KIND_BYTES) + bytes(payload)
+    if isinstance(payload, np.ndarray):
+        meta = json.dumps({"dtype": payload.dtype.str, "shape": payload.shape}).encode()
+        return (
+            struct.pack("<BI", _KIND_TENSOR, len(meta))
+            + meta
+            + np.ascontiguousarray(payload).tobytes()
+        )
+    # generic pytree: JSON skeleton with tensor leaves hoisted to a blob list
+    blobs: List[np.ndarray] = []
+
+    def hoist(x):
+        if isinstance(x, np.generic):
+            x = np.asarray(x)
+        if isinstance(x, np.ndarray):
+            blobs.append(np.ascontiguousarray(x))
+            return {"__tensor__": len(blobs) - 1,
+                    "dtype": x.dtype.str, "shape": list(x.shape)}
+        if isinstance(x, dict):
+            return {k: hoist(v) for k, v in x.items()}
+        if isinstance(x, (list, tuple)):
+            return [hoist(v) for v in x]
+        if isinstance(x, (str, int, float, bool)) or x is None:
+            return x
+        raise TypeError(f"unsupported payload leaf {type(x)}")
+
+    skel = json.dumps(hoist(payload)).encode()
+    out = io.BytesIO()
+    out.write(struct.pack("<BII", _KIND_JSONTREE, len(skel), len(blobs)))
+    out.write(skel)
+    for b in blobs:
+        raw = b.tobytes()
+        out.write(struct.pack("<Q", len(raw)))
+        out.write(raw)
+    return out.getvalue()
+
+
+def _decode_payload(raw: bytes) -> Payload:
+    kind = raw[0]
+    if kind == _KIND_BYTES:
+        return raw[1:]
+    if kind == _KIND_TENSOR:
+        (mlen,) = struct.unpack_from("<I", raw, 1)
+        meta = json.loads(raw[5 : 5 + mlen])
+        return np.frombuffer(raw[5 + mlen :], dtype=np.dtype(meta["dtype"])).reshape(
+            meta["shape"]
+        )
+    if kind == _KIND_JSONTREE:
+        slen, nblobs = struct.unpack_from("<II", raw, 1)
+        off = 9
+        skel = json.loads(raw[off : off + slen])
+        off += slen
+        blobs = []
+        for _ in range(nblobs):
+            (blen,) = struct.unpack_from("<Q", raw, off)
+            off += 8
+            blobs.append(raw[off : off + blen])
+            off += blen
+
+        def lower(x):
+            if isinstance(x, dict):
+                if "__tensor__" in x:
+                    return np.frombuffer(
+                        blobs[x["__tensor__"]], dtype=np.dtype(x["dtype"])
+                    ).reshape(x["shape"])
+                return {k: lower(v) for k, v in x.items()}
+            if isinstance(x, list):
+                return [lower(v) for v in x]
+            return x
+
+        return lower(skel)
+    raise ValueError(f"bad payload kind {kind}")
+
+
+@dataclass
+class WorkflowMessage:
+    """A message flowing between workflow instances."""
+
+    uid: bytes  # 16B UUID assigned by the proxy
+    timestamp: float  # proxy receive time (latency monitoring)
+    app_id: int  # selects the application workflow (routing)
+    stage: int  # current stage index
+    payload: Payload = None
+
+    @classmethod
+    def new(cls, app_id: int, payload: Payload = None, stage: int = 0) -> "WorkflowMessage":
+        return cls(
+            uid=uuidlib.uuid4().bytes,
+            timestamp=time.time(),
+            app_id=app_id,
+            stage=stage,
+            payload=payload,
+        )
+
+    @property
+    def uid_hex(self) -> str:
+        return self.uid.hex()
+
+    def pack(self) -> bytes:
+        body = _encode_payload(self.payload)
+        return _HDR.pack(self.uid, self.timestamp, self.app_id, self.stage, len(body)) + body
+
+    @classmethod
+    def unpack(cls, raw: bytes) -> "WorkflowMessage":
+        uid, ts, app_id, stage, plen = _HDR.unpack_from(raw, 0)
+        body = raw[HEADER_BYTES : HEADER_BYTES + plen]
+        return cls(uid=uid, timestamp=ts, app_id=app_id, stage=stage,
+                   payload=_decode_payload(body))
+
+    def next_stage(self, payload: Payload) -> "WorkflowMessage":
+        """Derive the message for the next hop, preserving identity fields."""
+        return WorkflowMessage(
+            uid=self.uid, timestamp=self.timestamp, app_id=self.app_id,
+            stage=self.stage + 1, payload=payload,
+        )

@@ -1,0 +1,108 @@
+"""Pipelining (§5): Theorem-1 rate matching and a discrete-event validator.
+
+Theorem 1: for stages X (K parallel requests, time T_X) and Y (time T_Y),
+assigning M = ceil(K * T_Y / T_X) parallel requests to Y makes the output
+rate of Y equal the input rate K/T_X, with steady-state per-request latency
+T_X + T_Y + network.
+
+The planner generalizes this to an N-stage chain: with the entrance stage
+processing K requests in parallel, stage i needs M_i = ceil(K * T_i / T_0)
+instances.  ``simulate_pipeline`` is an exact discrete-event simulation used
+by the tests and by ``benchmarks/bench_pipelining.py`` to validate the
+theorem and to measure what happens under mis-provisioning.
+"""
+from __future__ import annotations
+
+import heapq
+import math
+from dataclasses import dataclass, field
+from typing import List, Sequence
+
+
+def required_instances(t_entrance: float, k_entrance: int, t_stage: float) -> int:
+    """Theorem 1: M = ceil(K * T_Y / T_X)."""
+    return max(1, math.ceil(k_entrance * t_stage / t_entrance))
+
+
+def plan_chain(stage_times: Sequence[float], k_entrance: int = 1) -> List[int]:
+    """Instance counts for an N-stage chain keyed off the entrance stage."""
+    t0 = stage_times[0]
+    return [
+        k_entrance if i == 0 else required_instances(t0, k_entrance, t)
+        for i, t in enumerate(stage_times)
+    ]
+
+
+def steady_state_latency(stage_times: Sequence[float], network_s: float = 0.0) -> float:
+    """T(q) = sum_i T_i + Network(q) — no queueing in a Theorem-1 plan."""
+    return sum(stage_times) + network_s
+
+
+def offered_rate(t_entrance: float, k_entrance: int) -> float:
+    """Admissible arrival rate K/T_X (the fast-reject threshold, §5)."""
+    return k_entrance / t_entrance
+
+
+@dataclass
+class PipelineSimResult:
+    completion_times: List[float]
+    latencies: List[float]
+    output_rate: float
+    input_rate: float
+    max_queue_depth: int
+
+    @property
+    def rate_matched(self) -> bool:
+        return self.output_rate >= 0.999 * self.input_rate
+
+
+def simulate_pipeline(
+    stage_times: Sequence[float],
+    instances_per_stage: Sequence[int],
+    n_requests: int,
+    arrival_period: float,
+    network_s: float = 0.0,
+) -> PipelineSimResult:
+    """Event-driven simulation of an N-stage pipeline.
+
+    Each stage has ``instances_per_stage[i]`` parallel servers with service
+    time ``stage_times[i]``; requests arrive every ``arrival_period`` seconds
+    and traverse stages in order with ``network_s`` transfer delay per hop.
+    """
+    n_stages = len(stage_times)
+    assert len(instances_per_stage) == n_stages
+    # per-stage min-heap of server-free times
+    servers = [[0.0] * m for m in instances_per_stage]
+    for s in servers:
+        heapq.heapify(s)
+    queue_depth = [0] * n_stages
+    max_depth = 0
+
+    arrivals = [i * arrival_period for i in range(n_requests)]
+    completions: List[float] = []
+    latencies: List[float] = []
+    for a in arrivals:
+        t = a
+        for i in range(n_stages):
+            free = heapq.heappop(servers[i])
+            start = max(t, free)
+            # 1ns epsilon: repeated float addition vs i*period jitter must not
+            # register as queueing delay
+            queue_depth[i] += 1 if start > t + 1e-9 else 0
+            max_depth = max(max_depth, queue_depth[i])
+            done = start + stage_times[i]
+            heapq.heappush(servers[i], done)
+            t = done + network_s
+        completions.append(t)
+        latencies.append(t - a)
+
+    span = max(completions) - min(completions) if n_requests > 1 else 1.0
+    out_rate = (n_requests - 1) / span if span > 0 else float("inf")
+    in_rate = 1.0 / arrival_period
+    return PipelineSimResult(
+        completion_times=completions,
+        latencies=latencies,
+        output_rate=out_rate,
+        input_rate=in_rate,
+        max_queue_depth=max_depth,
+    )

@@ -1,0 +1,76 @@
+"""Request monitor with fast-reject (§3.2, §5).
+
+The proxy admits requests only while the arrival rate stays below the
+Theorem-1 admissible rate K/T_X (computed from live instance info supplied
+by the NodeManager).  Anything beyond is rejected immediately so the client
+can retry against another Workflow Set — this is what gives OnePiece its
+cross-set load balancing and bounded latency.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from dataclasses import dataclass
+
+
+@dataclass
+class MonitorStats:
+    admitted: int = 0
+    rejected: int = 0
+
+    @property
+    def reject_rate(self) -> float:
+        total = self.admitted + self.rejected
+        return self.rejected / total if total else 0.0
+
+
+class RequestMonitor:
+    """Sliding-window admission control at the proxy."""
+
+    def __init__(
+        self,
+        t_entrance_s: float,
+        k_entrance: int,
+        *,
+        window_s: float = 1.0,
+        max_in_flight: int = 0,
+        clock=time.monotonic,
+    ):
+        self._lock = threading.Lock()
+        self.window_s = window_s
+        self.clock = clock
+        self.stats = MonitorStats()
+        self._arrivals: deque = deque()
+        self._in_flight = 0
+        self.max_in_flight = max_in_flight  # 0 = unbounded
+        self.update_capacity(t_entrance_s, k_entrance)
+
+    # NM pushes fresh instance info here (Section 5: "continuously calculates K")
+    def update_capacity(self, t_entrance_s: float, k_entrance: int) -> None:
+        with self._lock:
+            self.t_entrance_s = t_entrance_s
+            self.k_entrance = k_entrance
+
+    @property
+    def admissible_rate(self) -> float:
+        return self.k_entrance / self.t_entrance_s
+
+    def try_admit(self) -> bool:
+        now = self.clock()
+        with self._lock:
+            while self._arrivals and now - self._arrivals[0] > self.window_s:
+                self._arrivals.popleft()
+            rate_ok = len(self._arrivals) < self.admissible_rate * self.window_s
+            flight_ok = not self.max_in_flight or self._in_flight < self.max_in_flight
+            if rate_ok and flight_ok:
+                self._arrivals.append(now)
+                self._in_flight += 1
+                self.stats.admitted += 1
+                return True
+            self.stats.rejected += 1
+            return False
+
+    def complete(self) -> None:
+        with self._lock:
+            self._in_flight = max(0, self._in_flight - 1)

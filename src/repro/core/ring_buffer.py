@@ -1,0 +1,337 @@
+"""The OnePiece double-ring buffer (§6.1) — multi-producer / single-consumer,
+variable-size messages, deadlock-free without CPU involvement on the
+receiver side.
+
+Structure (one registered RDMA region):
+
+    [ lock | header | size region (ring #2) | buffer region (ring #1) ]
+
+  * lock       — 8B word updated only with one-sided CAS; a non-zero value is
+                 an acquisition token ``(producer_id << 24) | nonce``.
+                 Producers that observe the same token for longer than the
+                 timeout perform a CAS takeover (the paper's TL event).
+  * header     — tail_buf / tail_slot (producer side, updated under the lock)
+                 and head_buf / head_slot (consumer side).  Monotonic u64
+                 counters; ring positions are ``counter % region_size``.
+  * size region— ring of 8-byte slots: ``(busy << 63) | entry_size``.  A slot
+                 is claimed with CAS(0 -> word): a delayed producer whose
+                 entry was overtaken loses the CAS and aborts (Cases 2-6).
+                 Only the consumer clears the busy bit (Theorem 2).
+  * buffer     — ring of raw bytes holding entries; each entry carries its own
+                 16B data header ``magic | payload_len | payload_crc | hdr_crc``
+                 so the consumer can detect corruption from delayed
+                 overwrites and discard at most that one entry (§6.1
+                 "Deadlock and Liveness").
+
+Wrap rule (both sides, deterministic): an entry never straddles the region
+end; if it does not fit contiguously the writer skips the tail fragment and
+starts at offset 0.  The consumer applies the same rule, so it follows the
+same logical path as every successful writer (Theorem 2).
+
+The producer append is exposed both as a plain call and as an explicit
+state machine (`AppendOp`) whose steps are the paper's atomic actions
+Lock/GH/WB/WL/UH/Unlock — the liveness tests interleave two machines to
+reproduce Cases 1-8 verbatim.
+"""
+from __future__ import annotations
+
+import struct
+import time
+import zlib
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.core.rdma import RdmaFabric, SimulatedCrash
+
+_U64 = struct.Struct("<Q")
+_ENTRY_HDR = struct.Struct("<IIII")  # magic, payload_len, payload_crc, hdr_crc
+ENTRY_MAGIC = 0x00EC_ECAF
+ENTRY_HDR_BYTES = _ENTRY_HDR.size  # 16
+
+# Header field offsets
+OFF_LOCK = 0
+OFF_TAIL_BUF = 8
+OFF_TAIL_SLOT = 16
+OFF_HEAD_BUF = 24
+OFF_HEAD_SLOT = 32
+OFF_SLOTS = 40
+SLOT_BYTES = 8
+BUSY_BIT = 1 << 63
+SIZE_MASK = BUSY_BIT - 1
+
+
+class Corrupt:
+    """Sentinel returned by poll() for a discarded (checksum-failed) entry."""
+
+    def __repr__(self) -> str:  # pragma: no cover
+        return "<corrupt entry>"
+
+
+CORRUPT = Corrupt()
+
+
+def _advance(counter: int, size: int, region: int) -> tuple[int, int]:
+    """Wrap rule: returns (start_pos, new_counter) for an entry of `size`."""
+    pos = counter % region
+    if pos + size <= region:
+        return pos, counter + size
+    skipped = region - pos  # unusable tail fragment
+    return 0, counter + skipped + size
+
+
+@dataclass
+class RingBufferStats:
+    produced: int = 0
+    consumed: int = 0
+    corrupt: int = 0
+    aborts_full: int = 0
+    aborts_cas: int = 0
+    lock_takeovers: int = 0
+    case7_recoveries: int = 0
+
+
+class DoubleRingBuffer:
+    """Layout owner + consumer-side (co-located, wait-free) operations."""
+
+    def __init__(
+        self,
+        fabric: RdmaFabric,
+        region: str,
+        *,
+        n_slots: int = 256,
+        buf_size: int = 1 << 20,
+        create: bool = True,
+        consumer_id: str = "consumer",
+    ):
+        self.fabric = fabric
+        self.region = region
+        self.n_slots = n_slots
+        self.buf_size = buf_size
+        self.slots_off = OFF_SLOTS
+        self.buf_off = OFF_SLOTS + n_slots * SLOT_BYTES
+        self.total_size = self.buf_off + buf_size
+        self.consumer_id = consumer_id
+        self.stats = RingBufferStats()
+        if create:
+            fabric.register(region, self.total_size)
+
+    # ----------------------------------------------------------- low level
+    def _slot_addr(self, slot_counter: int) -> int:
+        return self.slots_off + (slot_counter % self.n_slots) * SLOT_BYTES
+
+    def read_header(self, client: str) -> tuple[int, int, int, int]:
+        raw = self.fabric.read(client, self.region, OFF_TAIL_BUF, 32)
+        tb, ts, hb, hs = struct.unpack("<QQQQ", raw)
+        return tb, ts, hb, hs
+
+    # ------------------------------------------------------- consumer side
+    def poll(self) -> Union[bytes, Corrupt, None]:
+        """Wait-free consume of the next entry; None if nothing available."""
+        f, me = self.fabric, self.consumer_id
+        hb = f.read_u64(me, self.region, OFF_HEAD_BUF)
+        hs = f.read_u64(me, self.region, OFF_HEAD_SLOT)
+        word = f.read_u64(me, self.region, self._slot_addr(hs))
+        if not (word & BUSY_BIT):
+            return None
+        size = word & SIZE_MASK
+        start, new_hb = _advance(hb, size, self.buf_size)
+        raw = f.read(me, self.region, self.buf_off + start, size)
+        # (4) reset the busy bit — only the consumer may do this (Theorem 2)
+        f.write_u64(me, self.region, self._slot_addr(hs), 0)
+        # (5) advance head
+        f.write_u64(me, self.region, OFF_HEAD_BUF, new_hb)
+        f.write_u64(me, self.region, OFF_HEAD_SLOT, hs + 1)
+        # validate the data header (delayed-writer corruption detection)
+        if size < ENTRY_HDR_BYTES:
+            self.stats.corrupt += 1
+            return CORRUPT
+        magic, plen, pcrc, hcrc = _ENTRY_HDR.unpack_from(raw, 0)
+        if (
+            magic != ENTRY_MAGIC
+            or hcrc != zlib.crc32(raw[:12])
+            or plen != size - ENTRY_HDR_BYTES
+            or pcrc != zlib.crc32(raw[ENTRY_HDR_BYTES:])
+        ):
+            self.stats.corrupt += 1
+            return CORRUPT
+        self.stats.consumed += 1
+        return raw[ENTRY_HDR_BYTES:]
+
+    def drain(self, limit: int = 1 << 30):
+        """Consume everything currently available."""
+        out = []
+        for _ in range(limit):
+            item = self.poll()
+            if item is None:
+                break
+            out.append(item)
+        return out
+
+
+def _pack_entry(payload: bytes) -> bytes:
+    hdr12 = struct.pack("<III", ENTRY_MAGIC, len(payload), zlib.crc32(payload))
+    return hdr12 + struct.pack("<I", zlib.crc32(hdr12)) + payload
+
+
+class AppendOp:
+    """Producer append as the paper's explicit atomic-action sequence.
+
+    Steps (returned by .step() in order):
+      'lock' -> 'gh' -> 'wb' -> 'wl' -> 'uh' -> 'unlock' -> 'done'
+    Terminal early exits: 'abort_full' (insufficient space, lock released),
+    'abort_cas' (delayed producer lost the size-slot CAS, Cases 2/3/6).
+    """
+
+    def __init__(self, producer: "RingProducer", payload: bytes):
+        self.p = producer
+        self.rb = producer.rb
+        self.entry = _pack_entry(payload)
+        self.size = len(self.entry)
+        self.token = producer._new_token()
+        self.state = "lock"
+        # filled during gh:
+        self.tail_buf = self.tail_slot = 0
+        self.write_pos = self.new_tail = 0
+
+    # one paper-step per call; returns the state just executed
+    def step(self) -> str:
+        m = getattr(self, "_s_" + self.state)
+        return m()
+
+    def run(self) -> str:
+        while self.state not in ("done", "abort_full", "abort_cas"):
+            self.step()
+        return self.state
+
+    # ------------------------------------------------------------- states
+    def _s_lock(self) -> str:
+        self.p._acquire(self.token)
+        self.state = "gh"
+        return "lock"
+
+    def _s_gh(self) -> str:
+        """Read header; Case-7 recovery; space check."""
+        rb, f, me = self.rb, self.rb.fabric, self.p.client
+        while True:
+            tb, ts, hb, hs = rb.read_header(me)
+            if ts - hs >= rb.n_slots:
+                self.p._release(self.token)
+                rb.stats.aborts_full += 1
+                self.state = "abort_full"
+                return "gh"
+            word = f.read_u64(me, rb.region, rb._slot_addr(ts))
+            if word & BUSY_BIT:
+                # Case 7: a previous producer wrote data + size then died
+                # before UH.  Advance the header past its entry first.
+                _, tb2 = _advance(tb, word & SIZE_MASK, rb.buf_size)
+                f.write_u64(me, rb.region, OFF_TAIL_BUF, tb2)
+                f.write_u64(me, rb.region, OFF_TAIL_SLOT, ts + 1)
+                rb.stats.case7_recoveries += 1
+                continue
+            self.write_pos, self.new_tail = _advance(tb, self.size, rb.buf_size)
+            if self.new_tail - hb > rb.buf_size:
+                self.p._release(self.token)
+                rb.stats.aborts_full += 1
+                self.state = "abort_full"
+                return "gh"
+            self.tail_buf, self.tail_slot = tb, ts
+            self.state = "wb"
+            return "gh"
+
+    def _s_wb(self) -> str:
+        rb = self.rb
+        rb.fabric.write(
+            self.p.client, rb.region, rb.buf_off + self.write_pos, self.entry
+        )
+        self.state = "wl"
+        return "wb"
+
+    def _s_wl(self) -> str:
+        """Claim the size slot with CAS(0 -> busy|size)."""
+        rb = self.rb
+        word = BUSY_BIT | self.size
+        old = rb.fabric.compare_and_swap(
+            self.p.client, rb.region, rb._slot_addr(self.tail_slot), 0, word
+        )
+        if old != 0:
+            # A delayed producer: someone else finalized this slot first
+            # (Cases 2, 3, 6).  Our buffer write may have corrupted their
+            # payload — the consumer's checksum will discard it.
+            rb.stats.aborts_cas += 1
+            self.state = "abort_cas"
+            return "wl"
+        self.state = "uh"
+        return "wl"
+
+    def _s_uh(self) -> str:
+        rb, f, me = self.rb, self.rb.fabric, self.p.client
+        f.write_u64(me, rb.region, OFF_TAIL_BUF, self.new_tail)
+        f.write_u64(me, rb.region, OFF_TAIL_SLOT, self.tail_slot + 1)
+        self.state = "unlock"
+        return "uh"
+
+    def _s_unlock(self) -> str:
+        self.p._release(self.token)
+        self.rb.stats.produced += 1
+        self.state = "done"
+        return "unlock"
+
+
+class RingProducer:
+    """Producer endpoint (one per sending instance)."""
+
+    def __init__(
+        self,
+        rb: DoubleRingBuffer,
+        producer_id: int,
+        *,
+        lock_timeout_s: float = 2e-3,
+        client: Optional[str] = None,
+    ):
+        self.rb = rb
+        self.producer_id = producer_id
+        self.lock_timeout_s = lock_timeout_s
+        self.client = client or f"producer-{producer_id}"
+        self._nonce = 0
+
+    def _new_token(self) -> int:
+        self._nonce = (self._nonce + 1) & 0xFFFFFF
+        return (self.producer_id << 24) | self._nonce or 1
+
+    # ----------------------------------------------------------- lock mgmt
+    def _acquire(self, token: int) -> None:
+        rb, f = self.rb, self.rb.fabric
+        seen: Optional[int] = None
+        seen_at = 0.0
+        while True:
+            old = f.compare_and_swap(self.client, rb.region, OFF_LOCK, 0, token)
+            if old == 0:
+                return
+            now = time.monotonic()
+            if old != seen:
+                seen, seen_at = old, now
+            elif now - seen_at >= self.lock_timeout_s:
+                # TL: the holder looks dead — take the lock over (§6.1).
+                got = f.compare_and_swap(self.client, rb.region, OFF_LOCK, old, token)
+                if got == old:
+                    rb.stats.lock_takeovers += 1
+                    return
+                seen = None
+            time.sleep(0)  # yield
+
+    def _release(self, token: int) -> None:
+        # CAS so a takeover victim cannot free a lock it no longer owns.
+        self.rb.fabric.compare_and_swap(
+            self.client, self.rb.region, OFF_LOCK, token, 0
+        )
+
+    # --------------------------------------------------------------- append
+    def start_append(self, payload: bytes) -> AppendOp:
+        return AppendOp(self, payload)
+
+    def append(self, payload: bytes) -> bool:
+        """Returns True on success, False if the ring was full or CAS lost."""
+        try:
+            return self.start_append(payload).run() == "done"
+        except SimulatedCrash:
+            raise

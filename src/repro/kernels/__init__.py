@@ -1,0 +1,11 @@
+"""Pallas TPU kernels for the serving path's compute hot-spots.
+
+Each kernel package has:
+  kernel.py — pl.pallas_call + explicit BlockSpec VMEM tiling (TPU target)
+  ops.py    — jit'd public wrapper (auto interpret=True on CPU)
+  ref.py    — pure-jnp oracle the kernel is validated against
+
+The paper itself has no kernel-level contribution (it is a serving system);
+these cover the stages it schedules: prefill attention, long-KV decode
+attention, and the RWKV6 recurrence for the attention-free assigned arch.
+"""

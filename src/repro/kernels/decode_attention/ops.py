@@ -1,0 +1,48 @@
+"""Public flash-decode wrappers: [B,H,D] query layout, GQA grouping,
+full-precision and int8-quantized cache variants."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.decode_attention.kernel import (
+    decode_attention_grouped,
+    decode_attention_int8_grouped,
+)
+
+
+def decode_attention(q, k_cache, v_cache, cur_index, *, block_k: int = 512,
+                     interpret=None):
+    """q: [B,H,D]; k/v_cache: [B,S,KV,D]; returns [B,H,D]."""
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    qg = q.reshape(b, kv, h // kv, d)
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    out = decode_attention_grouped(qg, k_cache, v_cache, cur_index,
+                                   block_k=block_k, interpret=interp)
+    return out.reshape(b, h, d)
+
+
+def quantize_kv(cache: jax.Array):
+    """[B,S,KV,D] float -> (int8 values [B,S,KV,D], scales f32 [B,KV,S]).
+    Per-(head, position) absmax scaling."""
+    absmax = jnp.max(jnp.abs(cache.astype(jnp.float32)), axis=-1)  # [B,S,KV]
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(cache.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale.transpose(0, 2, 1)  # scales in [B,KV,S]
+
+
+def decode_attention_quantized(q, k_q, v_q, k_scale, v_scale, cur_index, *,
+                               block_k: int = 512, interpret=None):
+    """int8-cache flash-decode: q [B,H,D]; k_q/v_q int8 [B,S,KV,D];
+    scales f32 [B,KV,S].  HBM traffic = 1/2 of bf16 caches (beyond-paper
+    optimization for the decode-shape memory roofline)."""
+    b, h, d = q.shape
+    kv = k_q.shape[2]
+    qg = q.reshape(b, kv, h // kv, d)
+    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    out = decode_attention_int8_grouped(qg, k_q, v_q, k_scale, v_scale,
+                                        cur_index, block_k=block_k,
+                                        interpret=interp)
+    return out.reshape(b, h, d)

@@ -1,0 +1,20 @@
+"""Pure-jnp oracle for single-token decode attention over a KV cache."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def decode_attention_ref(q, k_cache, v_cache, cur_index):
+    """q: [B,H,D]; k/v_cache: [B,S,KV,D]; cur_index: scalar (last valid pos).
+    Returns [B,H,D]."""
+    b, h, d = q.shape
+    kv = k_cache.shape[2]
+    g = h // kv
+    qg = q.reshape(b, kv, g, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bngd,btnd->bngt", qg, k_cache.astype(jnp.float32))
+    pos = jnp.arange(k_cache.shape[1])
+    sc = jnp.where((pos <= cur_index)[None, None, None], sc, -1e30)
+    pr = jax.nn.softmax(sc, axis=-1)
+    out = jnp.einsum("bngt,btnd->bngd", pr, v_cache.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)

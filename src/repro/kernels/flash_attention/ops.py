@@ -1,0 +1,31 @@
+"""Public wrapper: [B,S,H,D] layout, GQA handling, CPU interpret fallback."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from repro.kernels.flash_attention.kernel import flash_attention_bhsd
+
+
+def _auto_interpret() -> bool:
+    return jax.default_backend() != "tpu"
+
+
+def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
+                    causal: bool = True, sm_scale=None,
+                    block_q: int = 128, block_k: int = 128,
+                    interpret=None) -> jax.Array:
+    """q: [B,S,H,D]; k,v: [B,S,KV,D] with H % KV == 0 (GQA)."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    if kv != h:  # GQA: repeat kv heads (kernel works per folded head)
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
+    interp = _auto_interpret() if interpret is None else interpret
+    of = flash_attention_bhsd(qf, kf, vf, causal=causal, sm_scale=sm_scale,
+                              block_q=block_q, block_k=block_k, interpret=interp)
+    return of.reshape(b, h, s, d).transpose(0, 2, 1, 3)

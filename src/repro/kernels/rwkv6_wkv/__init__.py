@@ -1,0 +1,3 @@
+from repro.kernels.rwkv6_wkv.ops import wkv6
+
+__all__ = ["wkv6"]

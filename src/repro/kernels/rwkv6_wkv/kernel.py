@@ -1,0 +1,83 @@
+"""WKV6 recurrence Pallas TPU kernel (the rwkv6-7b hot loop).
+
+Grid: (batch, heads, num_time_blocks) — trailing dim sequential, the
+state matrix S[K,V] is VMEM scratch carried across time blocks; within a
+block the recurrence runs as a fori_loop over VREG-resident rows.
+
+BlockSpec tiling (per grid step, VMEM):
+  r,k,v,w: [1, block_t, 1, K]     u: [1, K]
+  y:       [1, block_t, 1, K]     state io: [1, 1, K, K]
+K = head size = 64 for rwkv6-7b; a [64,64] f32 state tile is 16 KiB —
+tiny against VMEM, so block_t mainly amortizes grid overhead.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _wkv_kernel(r_ref, k_ref, v_ref, w_ref, u_ref, s0_ref, y_ref, sout_ref,
+                s_ref, *, block_t: int, num_t_blocks: int):
+    tb = pl.program_id(2)
+
+    @pl.when(tb == 0)
+    def _init():
+        s_ref[...] = s0_ref[0, 0].astype(jnp.float32)
+
+    u = u_ref[0].astype(jnp.float32)              # [K]
+
+    def step(i, _):
+        rt = r_ref[0, i, 0].astype(jnp.float32)   # [K]
+        kt = k_ref[0, i, 0].astype(jnp.float32)
+        vt = v_ref[0, i, 0].astype(jnp.float32)
+        wt = w_ref[0, i, 0].astype(jnp.float32)
+        s = s_ref[...]                            # [K,V]
+        y = rt @ s + jnp.sum(u * kt * rt) * vt    # [V]
+        y_ref[0, i, 0] = y.astype(y_ref.dtype)
+        s_ref[...] = wt[:, None] * s + kt[:, None] * vt[None, :]
+        return 0
+
+    jax.lax.fori_loop(0, block_t, step, 0)
+
+    @pl.when(tb == num_t_blocks - 1)
+    def _finalize():
+        sout_ref[0, 0] = s_ref[...].astype(sout_ref.dtype)
+
+
+@functools.partial(jax.jit, static_argnames=("block_t", "interpret"))
+def wkv6_bthk(r, k, v, w, u, state, *, block_t=64, interpret=False):
+    """r/k/v/w: [B,T,H,K]; u: [H,K]; state: [B,H,K,K] f32.
+    Returns (y [B,T,H,K], final state)."""
+    b, t, h, kk = r.shape
+    block_t = min(block_t, t)
+    assert t % block_t == 0
+    nt = t // block_t
+
+    kernel = functools.partial(_wkv_kernel, block_t=block_t, num_t_blocks=nt)
+    y, s_out = pl.pallas_call(
+        kernel,
+        grid=(b, h, nt),
+        in_specs=[
+            pl.BlockSpec((1, block_t, 1, kk), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, kk), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, kk), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, block_t, 1, kk), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, kk), lambda b_, h_, j: (h_, 0)),
+            pl.BlockSpec((1, 1, kk, kk), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_t, 1, kk), lambda b_, h_, j: (b_, j, h_, 0)),
+            pl.BlockSpec((1, 1, kk, kk), lambda b_, h_, j: (b_, h_, 0, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((b, t, h, kk), r.dtype),
+            jax.ShapeDtypeStruct((b, h, kk, kk), jnp.float32),
+        ],
+        scratch_shapes=[pltpu.VMEM((kk, kk), jnp.float32)],
+        interpret=interpret,
+    )(r, k, v, w, u, state)
+    return y, s_out

@@ -1,0 +1,25 @@
+"""Pure-jnp oracle for the WKV6 recurrence (scan over time)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, state):
+    """r/k/v/w: [B,T,H,K]; u: [H,K]; state: [B,H,K,V] (K==V==head size).
+
+        y_t = S^T r_t + (u . k_t . r_t) v_t
+        S  <- diag(w_t) S + k_t v_t^T
+    Returns (y [B,T,H,V], final state).
+    """
+
+    def step(s, xs):
+        rt, kt, vt, wt = xs
+        y = jnp.einsum("bhk,bhkv->bhv", rt, s)
+        y = y + jnp.einsum("bhk,bhk,bhv->bhv", u[None] * kt, rt, vt)
+        s = wt[..., None] * s + kt[..., None] * vt[:, :, None, :]
+        return s, y
+
+    xs = jax.tree.map(lambda a: a.swapaxes(0, 1), (r, k, v, w))
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.swapaxes(0, 1), state

@@ -1,0 +1,374 @@
+"""Trip-count-aware analysis of compiled (SPMD-partitioned) HLO.
+
+XLA's ``compiled.cost_analysis()`` counts each ``while`` body ONCE, which
+under-reports FLOPs/bytes/collectives by the layer count for scan-over-layers
+models (and by the sequence length for recurrent scans).  Since every model
+here scans, we parse ``compiled.as_text()`` ourselves:
+
+  1. split the module into named computations and build a per-computation
+     symbol table (instr name -> result shape),
+  2. recover each while loop's trip count from its condition computation
+     (compare(iter, constant) pattern emitted by jax.lax.scan / fori_loop),
+  3. propagate multipliers through the (possibly nested) while/call nesting,
+  4. accumulate, weighted by multiplier:
+       * dot/convolution FLOPs: 2 * prod(result dims) * contraction size,
+       * HBM traffic proxy: operand + result bytes of top-level ops
+         (fusion boundaries = one kernel; fusion bodies are skipped),
+       * collective wire bytes: operand sizes of all-gather / all-reduce /
+         reduce-scatter / all-to-all / collective-permute.
+
+All numbers are per-device — the module is the per-device SPMD program.
+"""
+from __future__ import annotations
+
+import math
+import re
+from dataclasses import dataclass, field
+from typing import Dict, List, Optional, Set, Tuple
+
+_DTYPE_BYTES = {
+    "f64": 8, "c64": 8, "f32": 4, "f16": 2, "bf16": 2,
+    "f8e4m3fn": 1, "f8e5m2": 1,
+    "s64": 8, "u64": 8, "s32": 4, "u32": 4, "s16": 2, "u16": 2,
+    "s8": 1, "u8": 1, "pred": 1,
+}
+_SHAPE_RE = re.compile(
+    r"\b(" + "|".join(_DTYPE_BYTES) + r")\[([0-9,]*)\](?:\{[^}]*\})?"
+)
+_COLLECTIVES = ("all-gather", "all-reduce", "reduce-scatter", "all-to-all",
+                "collective-permute")
+_SKIP_OPS = {
+    "parameter", "constant", "get-tuple-element", "tuple", "bitcast",
+    "after-all", "partition-id", "replica-id", "iota", "copy-start",
+    "copy-done",
+}
+_COMP_HDR = re.compile(r"^(?:ENTRY\s+)?%([\w.\-]+)\s*\(")
+_INSTR_RE = re.compile(r"^\s+(?:ROOT\s+)?%([\w.\-]+)\s*=\s*(.*)$")
+_OPKIND_RE = re.compile(r"\)\s*([a-z][a-z0-9\-]*)\(|^(?:[^(]*?)\b([a-z][a-z0-9\-]*)\(")
+_REF_RE = re.compile(r"%([\w.\-]+)")
+
+
+def _tuple_bytes(type_text: str) -> int:
+    return sum(_DTYPE_BYTES[dt] * int(math.prod([int(d) for d in dims.split(",") if d] or [1]))
+               for dt, dims in _SHAPE_RE.findall(type_text))
+
+
+@dataclass
+class Instr:
+    name: str
+    op: str
+    line: str
+    result_bytes: int
+    result_dims: Tuple[int, ...]
+    operand_refs: List[str]
+    body: Optional[str] = None
+    condition: Optional[str] = None
+    calls: List[str] = field(default_factory=list)
+
+
+@dataclass
+class Computation:
+    name: str
+    instrs: List[Instr] = field(default_factory=list)
+    table: Dict[str, Instr] = field(default_factory=dict)
+    root: Optional[Instr] = None
+    params: Dict[int, str] = field(default_factory=dict)  # index -> instr name
+
+
+def _split_result_and_op(rest: str) -> Tuple[str, str, str]:
+    """rest = '<result-type> <op>(<operands>), attrs...'.
+    Returns (result_type_text, op, operands_text)."""
+    m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rest)
+    while m:
+        op = m.group(1)
+        if op not in _DTYPE_BYTES and not re.match(r"^[a-z0-9]+$", op) or True:
+            # accept the first identifier( that is not a dtype
+            if op not in _DTYPE_BYTES:
+                break
+        m = re.search(r"\b([a-z][a-z0-9\-]*)\(", rest[m.end():])
+    if not m:
+        return rest, "", ""
+    op_start = rest.index(op + "(", 0)
+    result_type = rest[:op_start]
+    inner = rest[op_start + len(op) + 1:]
+    depth, end = 1, len(inner)
+    for i, ch in enumerate(inner):
+        if ch == "(":
+            depth += 1
+        elif ch == ")":
+            depth -= 1
+            if depth == 0:
+                end = i
+                break
+    return result_type, op, inner[:end]
+
+
+def parse_module(text: str) -> Tuple[Dict[str, Computation], str]:
+    comps: Dict[str, Computation] = {}
+    entry = ""
+    cur: Optional[Computation] = None
+    for raw in text.splitlines():
+        line = raw.rstrip()
+        if cur is None:
+            if line.startswith(("ENTRY", "%")) and line.endswith("{"):
+                m = _COMP_HDR.match(line)
+                if m:
+                    cur = Computation(m.group(1))
+                    if line.startswith("ENTRY"):
+                        entry = m.group(1)
+            continue
+        if line == "}":
+            comps[cur.name] = cur
+            cur = None
+            continue
+        m = _INSTR_RE.match(line)
+        if not m:
+            continue
+        name, rest = m.groups()
+        result_type, op, operands_text = _split_result_and_op(rest)
+        if not op:
+            continue
+        attrs = rest[len(result_type):]
+        inst = Instr(
+            name=name, op=op, line=line,
+            result_bytes=_tuple_bytes(result_type),
+            result_dims=tuple(
+                int(d) for d in (_SHAPE_RE.findall(result_type) or [("", "")])[0][1].split(",") if d
+            ) if _SHAPE_RE.findall(result_type) else (),
+            operand_refs=_REF_RE.findall(operands_text),
+        )
+        bm = re.search(r"body=%?([\w.\-]+)", attrs)
+        cm = re.search(r"condition=%?([\w.\-]+)", attrs)
+        km = re.findall(r"(?:calls|to_apply)=%?([\w.\-]+)", attrs)
+        if bm:
+            inst.body = bm.group(1)
+        if cm:
+            inst.condition = cm.group(1)
+        inst.calls = km
+        cur.instrs.append(inst)
+        cur.table[name] = inst
+        if line.lstrip().startswith("ROOT"):
+            cur.root = inst
+        if op == "parameter":
+            pm = re.search(r"parameter\((\d+)\)", rest)
+            if pm:
+                cur.params[int(pm.group(1))] = name
+    if cur is not None:
+        comps[cur.name] = cur
+    return comps, entry
+
+
+_SLICE_READERS = {"dynamic-slice", "gather"}
+
+
+def fusion_bytes(i: Instr, comp: Computation, comps: Dict[str, Computation]) -> int:
+    """HBM traffic of one fusion kernel, slice-aware:
+      * an operand consumed ONLY by dynamic-slice/gather inside the body
+        contributes the slice result bytes, not the full array (scan xs
+        slicing, blockwise-attention KV slicing, decode cache reads);
+      * a fusion whose root is dynamic-update-slice writes only the update
+        region (in-place scan-carry / KV-cache update), not the full tensor.
+    Everything else: full operand + result bytes.
+    """
+    body = comps.get(i.calls[0]) if i.calls else None
+    total = 0
+    dus_instrs = [x for x in body.instrs if x.op == "dynamic-update-slice"] \
+        if body is not None else []
+    # ---- result ----
+    if dus_instrs:
+        # scan-carry / KV-cache in-place update: physical write = update slices
+        upd_bytes = 0
+        for x in dus_instrs:
+            if len(x.operand_refs) > 1 and x.operand_refs[1] in body.table:
+                upd_bytes += body.table[x.operand_refs[1]].result_bytes
+        total += 2 * (upd_bytes or i.result_bytes)  # read-modify-write the slice
+    else:
+        total += i.result_bytes
+    # ---- operands ----
+    for idx, ref in enumerate(i.operand_refs):
+        src = comp.table.get(ref)
+        full = src.result_bytes if src else 0
+        if body is None:
+            total += full
+            continue
+        if dus_instrs and full == i.result_bytes:
+            continue  # aliased DUS target (the carried stacked array)
+        pname = body.params.get(idx)
+        if pname is None:
+            total += full
+            continue
+        consumers = [x for x in body.instrs if pname in x.operand_refs]
+        if consumers and all(x.op in _SLICE_READERS for x in consumers):
+            total += sum(x.result_bytes for x in consumers)
+        elif consumers and all(
+            x.op == "dynamic-update-slice" and x.operand_refs and x.operand_refs[0] == pname
+            for x in consumers
+        ):
+            total += 0  # in-place DUS target: write counted at the root
+        else:
+            total += full
+    return total
+
+
+def _constants_reachable(comp: Computation, comps: Dict[str, Computation],
+                         depth: int = 0) -> List[int]:
+    out = []
+    for i in comp.instrs:
+        m = re.search(r"constant\((-?\d+)\)", i.line)
+        if m:
+            out.append(int(m.group(1)))
+        if depth < 2:
+            for callee in i.calls:
+                if callee in comps:
+                    out.extend(_constants_reachable(comps[callee], comps, depth + 1))
+    return out
+
+
+def _has_compare(comp: Computation) -> bool:
+    return any(x.op == "compare" for x in comp.instrs)
+
+
+def _trip_count(cond: Computation, comps: Dict[str, Computation]) -> Optional[int]:
+    """Trip bound = the constant operand of the compare in the condition."""
+    consts: Dict[str, int] = {}
+    for x in cond.instrs:
+        m = re.search(r"constant\((-?\d+)\)", x.line)
+        if m:
+            consts[x.name] = int(m.group(1))
+    # direct compare in the condition
+    for x in cond.instrs:
+        if x.op == "compare":
+            vals = [consts[r] for r in x.operand_refs if r in consts]
+            if vals:
+                return max(v for v in vals)
+    # compare wrapped in a fusion: use that fusion's constant operands
+    for x in cond.instrs:
+        if x.op == "fusion" and any(
+            c in comps and _has_compare(comps[c]) for c in x.calls
+        ):
+            vals = [consts[r] for r in x.operand_refs if r in consts]
+            if vals:
+                return max(v for v in vals)
+    all_c = [c for c in _constants_reachable(cond, comps) if c > 0]
+    return max(all_c) if all_c else None
+
+
+def compute_multipliers(comps: Dict[str, Computation], entry: str) -> Dict[str, float]:
+    mult: Dict[str, float] = {name: 0.0 for name in comps}
+    if entry not in comps:
+        referenced: Set[str] = set()
+        for c in comps.values():
+            for i in c.instrs:
+                referenced.update(filter(None, [i.body, i.condition]))
+                referenced.update(i.calls)
+        entry = next((n for n in comps if n not in referenced), next(iter(comps)))
+    mult[entry] = 1.0
+    for _ in range(64):  # fixpoint over nesting (depth is small)
+        changed = False
+        for name, c in comps.items():
+            m = mult.get(name, 0.0)
+            if m == 0.0:
+                continue
+            for i in c.instrs:
+                targets: List[Tuple[str, float]] = []
+                if i.op == "while" and i.body:
+                    trips = 1
+                    if i.condition and i.condition in comps:
+                        t = _trip_count(comps[i.condition], comps)
+                        trips = t if t else 1
+                    targets.append((i.body, m * trips))
+                    if i.condition:
+                        targets.append((i.condition, m * (trips + 1)))
+                for callee in i.calls:
+                    targets.append((callee, m))
+                for tgt, want in targets:
+                    if tgt in mult and mult[tgt] < want:
+                        mult[tgt] = want
+                        changed = True
+        if not changed:
+            break
+    return mult
+
+
+def _fusion_bodies(comps: Dict[str, Computation]) -> Set[str]:
+    """Computations called from fusion instrs (and their transitive calls) —
+    their ops execute inside one kernel; bytes counted at the boundary."""
+    seeds: Set[str] = set()
+    for c in comps.values():
+        for i in c.instrs:
+            if i.op == "fusion":
+                seeds.update(i.calls)
+            # reduce/sort/map/scatter lambda bodies are also intra-kernel
+            if i.op in ("reduce", "reduce-window", "sort", "map", "scatter",
+                        "select-and-scatter", "all-reduce", "reduce-scatter"):
+                seeds.update(i.calls)
+    out = set()
+    frontier = list(seeds)
+    while frontier:
+        n = frontier.pop()
+        if n in out or n not in comps:
+            continue
+        out.add(n)
+        for i in comps[n].instrs:
+            frontier.extend(i.calls)
+    return out
+
+
+def _dot_flops(i: Instr, table: Dict[str, Instr]) -> float:
+    if not i.result_dims:
+        return 0.0
+    m = re.search(r"lhs_contracting_dims=\{([0-9,]*)\}", i.line)
+    contraction = 1
+    if m and i.operand_refs:
+        lhs = table.get(i.operand_refs[0])
+        if lhs and lhs.result_dims:
+            for d in m.group(1).split(","):
+                if d:
+                    contraction *= lhs.result_dims[int(d)]
+    return 2.0 * math.prod(i.result_dims) * contraction
+
+
+def analyze(text: str) -> Dict[str, float]:
+    comps, entry = parse_module(text)
+    mult = compute_multipliers(comps, entry)
+    fusion_bodies = _fusion_bodies(comps)
+    flops = 0.0
+    bytes_hbm = 0.0
+    coll_bytes: Dict[str, float] = {}
+    coll_count: Dict[str, float] = {}
+    for name, c in comps.items():
+        m = mult.get(name, 0.0)
+        if m == 0.0:
+            continue
+        in_fusion = name in fusion_bodies
+        for i in c.instrs:
+            if i.op in ("dot", "convolution"):
+                flops += m * _dot_flops(i, c.table)
+            if i.op in _SKIP_OPS or i.op == "while" or not i.op:
+                continue
+            kind = next((k for k in _COLLECTIVES if i.op.startswith(k)), None)
+            if kind and not i.op.endswith("-done"):
+                ob = sum(c.table[r].result_bytes for r in i.operand_refs
+                         if r in c.table)
+                coll_bytes[kind] = coll_bytes.get(kind, 0.0) + m * (ob or i.result_bytes)
+                coll_count[kind] = coll_count.get(kind, 0.0) + m
+            if not in_fusion:
+                if i.op == "fusion":
+                    bytes_hbm += m * fusion_bytes(i, c, comps)
+                elif i.op in _SLICE_READERS:
+                    bytes_hbm += m * 2 * i.result_bytes  # read + write slice
+                elif i.op == "dynamic-update-slice":
+                    upd = c.table.get(i.operand_refs[1]) if len(i.operand_refs) > 1 else None
+                    bytes_hbm += m * 2 * (upd.result_bytes if upd else i.result_bytes)
+                else:
+                    ob = sum(c.table[r].result_bytes for r in i.operand_refs
+                             if r in c.table)
+                    bytes_hbm += m * (i.result_bytes + ob)
+    return {
+        "flops": flops,
+        "bytes_hbm": bytes_hbm,
+        "collective_bytes_by_kind": coll_bytes,
+        "collective_count_by_kind": coll_count,
+        "collective_bytes": sum(coll_bytes.values()),
+        "n_computations": len(comps),
+    }

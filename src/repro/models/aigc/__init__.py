@@ -1,0 +1,12 @@
+"""The paper's workload: a Wan2.1-style image-to-video diffusion pipeline
+decomposed into the four OnePiece stages (§2.4):
+
+    T5&CLIP text conditioning -> VAE encode -> DiT diffusion -> VAE decode
+
+Each stage is a self-contained JAX model so the cluster layer can place them
+on separate workflow instances and move tensors between them as
+WorkflowMessages over the RDMA fabric.
+"""
+from repro.models.aigc.pipeline import WanI2VPipeline, build_stage_fns
+
+__all__ = ["WanI2VPipeline", "build_stage_fns"]

@@ -1,0 +1,147 @@
+"""Diffusion stage: a DiT (diffusion transformer) over video latent tokens
+with text cross-attention and AdaLN timestep conditioning, plus a minimal
+DDIM-style sampler.  This is the paper's T_Y >> T_X stage — the one the
+NodeManager keeps scaling (Figure 10).
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wan_i2v import WanPipelineConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+Tree = Dict[str, Any]
+
+
+def abstract_params(cfg: WanPipelineConfig, dtype: str = "float32") -> Tree:
+    d, f, h, nl = cfg.dit_d_model, cfg.dit_d_ff, cfg.dit_heads, cfg.dit_layers
+    hd = d // h
+    patch_dim = cfg.patch * cfg.patch * cfg.vae_latent_ch
+    return {
+        "patch_in": ParamSpec((patch_dim, d), (None, "embed"), dtype),
+        "time_mlp1": ParamSpec((256, d), (None, "embed"), dtype),
+        "time_mlp2": ParamSpec((d, d), ("embed", "embed"), dtype),
+        "text_proj": ParamSpec((cfg.text_d_model, d), (None, "embed"), dtype),
+        "final_norm": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "patch_out": ParamSpec((d, patch_dim), ("embed", None), dtype, "small"),
+        "layers": {
+            "ada": ParamSpec((nl, d, 6 * d), ("layers", "embed", None), dtype, "small"),
+            "attn_norm": ParamSpec((nl, d), ("layers", "embed"), dtype, "zeros"),
+            "wq": ParamSpec((nl, d, h, hd), ("layers", "embed", "heads", "head_dim"), dtype),
+            "wk": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "wv": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "wo": ParamSpec((nl, h, hd, d), ("layers", "heads", "head_dim", "embed"), dtype),
+            "x_wq": ParamSpec((nl, d, h, hd), ("layers", "embed", "heads", "head_dim"), dtype),
+            "x_wk": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "x_wv": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "x_wo": ParamSpec((nl, h, hd, d), ("layers", "heads", "head_dim", "embed"), dtype),
+            "x_norm": ParamSpec((nl, d), ("layers", "embed"), dtype, "zeros"),
+            "mlp_norm": ParamSpec((nl, d), ("layers", "embed"), dtype, "zeros"),
+            "w1": ParamSpec((nl, d, f), ("layers", "embed", "mlp"), dtype),
+            "w2": ParamSpec((nl, f, d), ("layers", "mlp", "embed"), dtype),
+        },
+    }
+
+
+def _timestep_embed(t: jax.Array, dim: int = 256) -> jax.Array:
+    half = dim // 2
+    freqs = jnp.exp(-jnp.arange(half) * (jnp.log(10000.0) / (half - 1)))
+    ang = t.astype(jnp.float32)[:, None] * freqs[None]
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def patchify(z: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+    """z: [B,F,h,w,C] -> tokens [B, F*(h/p)*(w/p), p*p*C]."""
+    b, f, h, w, c = z.shape
+    p = cfg.patch
+    z = z.reshape(b, f, h // p, p, w // p, p, c)
+    z = z.transpose(0, 1, 2, 4, 3, 5, 6)
+    return z.reshape(b, f * (h // p) * (w // p), p * p * c)
+
+
+def unpatchify(tokens: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+    b = tokens.shape[0]
+    p, c = cfg.patch, cfg.vae_latent_ch
+    hp = cfg.latent_size // p
+    z = tokens.reshape(b, cfg.num_frames, hp, hp, p, p, c)
+    z = z.transpose(0, 1, 2, 4, 3, 5, 6)
+    return z.reshape(b, cfg.num_frames, hp * p, hp * p, c)
+
+
+def dit_forward(params: Tree, noisy_tokens: jax.Array, t: jax.Array,
+                text_emb: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+    """Predict noise. noisy_tokens: [B,N,patch_dim]; t: [B]; text: [B,T,Dt]."""
+    x = noisy_tokens @ params["patch_in"]
+    b, n, d = x.shape
+    pos = jnp.arange(n)
+    x = x + L.rope_freqs(pos, d, 10_000.0)[1].repeat(2, -1)[None, :, :d].astype(x.dtype)
+    temb = jax.nn.silu(_timestep_embed(t) @ params["time_mlp1"]) @ params["time_mlp2"]
+    ctx = text_emb @ params["text_proj"]
+
+    def body(xx, lp):
+        ada = (temb @ lp["ada"]).reshape(b, 6, d)[:, :, None]
+        sh1, sc1, g1, sh2, sc2, g2 = [ada[:, i] for i in range(6)]
+        h = L.rms_norm(xx, lp["attn_norm"]) * (1 + sc1) + sh1
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        att = L.attention_full(q, k, v, causal=False)
+        xx = xx + g1 * jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
+        # text cross attention
+        hx = L.rms_norm(xx, lp["x_norm"])
+        qx = jnp.einsum("bsd,dhk->bshk", hx, lp["x_wq"])
+        kx = jnp.einsum("btd,dhk->bthk", ctx, lp["x_wk"])
+        vx = jnp.einsum("btd,dhk->bthk", ctx, lp["x_wv"])
+        attx = L.attention_full(qx, kx, vx, causal=False)
+        xx = xx + jnp.einsum("bshk,hkd->bsd", attx, lp["x_wo"])
+        h = L.rms_norm(xx, lp["mlp_norm"]) * (1 + sc2) + sh2
+        xx = xx + g2 * (jax.nn.gelu(h @ lp["w1"]) @ lp["w2"])
+        return xx, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    x = L.rms_norm(x, params["final_norm"])
+    return x @ params["patch_out"]
+
+
+def ddim_sample(params: Tree, z_init_tokens: jax.Array, text_emb: jax.Array,
+                cfg: WanPipelineConfig, rng: jax.Array,
+                n_steps: int = 0) -> jax.Array:
+    """Deterministic DDIM from pure noise conditioned on (image-latent
+    prepended) tokens + text.  Returns denoised latent tokens."""
+    steps = n_steps or cfg.diffusion_steps
+    betas = jnp.linspace(1e-4, 0.02, 1000)
+    alphas = jnp.cumprod(1.0 - betas)
+    ts = jnp.linspace(999, 0, steps).astype(jnp.int32)
+
+    x = jax.random.normal(rng, z_init_tokens.shape, z_init_tokens.dtype)
+
+    def step(x, i):
+        t = ts[i]
+        t_prev = jnp.where(i + 1 < steps, ts[jnp.minimum(i + 1, steps - 1)], 0)
+        a_t, a_p = alphas[t], alphas[t_prev]
+        cond = x + z_init_tokens  # image conditioning via additive latent
+        eps = dit_forward(params, cond, jnp.full((x.shape[0],), t), text_emb, cfg)
+        x0 = (x - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+        x = jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+        return x, None
+
+    x, _ = jax.lax.scan(step, x, jnp.arange(steps))
+    return x
+
+
+def diffusion_loss(params, z_tokens, text_emb, cfg, rng):
+    """Noise-prediction MSE (for the training example)."""
+    rt, rn = jax.random.split(rng)
+    b = z_tokens.shape[0]
+    betas = jnp.linspace(1e-4, 0.02, 1000)
+    alphas = jnp.cumprod(1.0 - betas)
+    t = jax.random.randint(rt, (b,), 0, 1000)
+    a = alphas[t][:, None, None]
+    noise = jax.random.normal(rn, z_tokens.shape, z_tokens.dtype)
+    noisy = jnp.sqrt(a) * z_tokens + jnp.sqrt(1 - a) * noise
+    pred = dit_forward(params, noisy, t, text_emb, cfg)
+    return jnp.mean((pred - noise) ** 2)

@@ -1,0 +1,139 @@
+"""The Wan2.1-style I2V pipeline wired as OnePiece workflow stages.
+
+``build_stage_fns`` returns the four user-defined stage callables the
+cluster layer runs on workflow instances; payloads are numpy pytrees moving
+over the RDMA fabric as WorkflowMessages — the dynamic-size, arbitrary-type
+case NCCL can't serve (§6 L1/L2).
+"""
+from __future__ import annotations
+
+import time
+from dataclasses import dataclass, field
+from typing import Any, Callable, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.wan_i2v import SMALL, WanPipelineConfig
+from repro.models.aigc import dit as dit_mod
+from repro.models.aigc import text_encoder as text_mod
+from repro.models.aigc import vae as vae_mod
+from repro.models.param import init_tree
+
+
+@dataclass
+class WanI2VPipeline:
+    """All four stage models + jitted entry points."""
+
+    cfg: WanPipelineConfig = field(default_factory=lambda: SMALL)
+    seed: int = 0
+
+    def __post_init__(self):
+        k = jax.random.PRNGKey(self.seed)
+        k1, k2, k3 = jax.random.split(k, 3)
+        self.text_params = init_tree(k1, text_mod.abstract_params(self.cfg))
+        self.vae_params = init_tree(k2, vae_mod.abstract_params(self.cfg))
+        self.dit_params = init_tree(k3, dit_mod.abstract_params(self.cfg))
+        cfg = self.cfg
+
+        @jax.jit
+        def encode_text(tokens):
+            return text_mod.encode_text(self.text_params, tokens, cfg)
+
+        @jax.jit
+        def vae_encode(image, rng):
+            z, _, _ = vae_mod.encode(self.vae_params, image, cfg, rng)
+            return z
+
+        @jax.jit
+        def diffuse(z_img_tokens, text_emb, rng):
+            return dit_mod.ddim_sample(self.dit_params, z_img_tokens, text_emb, cfg, rng)
+
+        @jax.jit
+        def vae_decode(latent_frames):
+            b, f = latent_frames.shape[:2]
+            flat = latent_frames.reshape((b * f,) + latent_frames.shape[2:])
+            frames = vae_mod.decode(self.vae_params, flat, cfg)
+            return frames.reshape((b, f) + frames.shape[1:])
+
+        self.encode_text = encode_text
+        self.vae_encode = vae_encode
+        self.diffuse = diffuse
+        self.vae_decode = vae_decode
+
+    # ------------------------------------------------ monolithic reference
+    def generate(self, tokens: np.ndarray, image: np.ndarray, seed: int = 0):
+        """End-to-end in one process (the paper's monolithic baseline)."""
+        cfg = self.cfg
+        rng = jax.random.PRNGKey(seed)
+        r1, r2 = jax.random.split(rng)
+        temb = self.encode_text(jnp.asarray(tokens))
+        z_img = self.vae_encode(jnp.asarray(image), r1)  # [B,h,w,C]
+        z_tokens = dit_mod.patchify(
+            jnp.repeat(z_img[:, None], cfg.num_frames, axis=1), cfg
+        )
+        lat = self.diffuse(z_tokens, temb, r2)
+        frames = self.vae_decode(dit_mod.unpatchify(lat, cfg))
+        return np.asarray(frames)
+
+
+def build_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
+    """Stage callables for WorkflowInstances.  Payload schema:
+       client -> text_encode: {tokens, image, seed}
+       -> vae_encode: {text_emb, image, seed}
+       -> diffusion:  {text_emb, z_tokens, seed}
+       -> vae_decode: {latents}
+       -> database:   frames ndarray
+    """
+    cfg = pipe.cfg
+
+    def stage_text(p):
+        temb = pipe.encode_text(jnp.asarray(p["tokens"]))
+        return {"text_emb": np.asarray(temb), "image": p["image"], "seed": p["seed"]}
+
+    def stage_vae_encode(p):
+        rng = jax.random.split(jax.random.PRNGKey(int(p["seed"])))[0]
+        z = pipe.vae_encode(jnp.asarray(p["image"]), rng)
+        z_tokens = dit_mod.patchify(
+            jnp.repeat(z[:, None], cfg.num_frames, axis=1), cfg
+        )
+        return {"text_emb": p["text_emb"], "z_tokens": np.asarray(z_tokens),
+                "seed": p["seed"]}
+
+    def stage_diffusion(p):
+        rng = jax.random.split(jax.random.PRNGKey(int(p["seed"])))[1]
+        lat = pipe.diffuse(jnp.asarray(p["z_tokens"]), jnp.asarray(p["text_emb"]), rng)
+        return {"latents": np.asarray(lat)}
+
+    def stage_vae_decode(p):
+        frames = pipe.vae_decode(dit_mod.unpatchify(jnp.asarray(p["latents"]), cfg))
+        return np.asarray(frames)
+
+    return {
+        "text_encode": stage_text,
+        "vae_encode": stage_vae_encode,
+        "diffusion": stage_diffusion,
+        "vae_decode": stage_vae_decode,
+    }
+
+
+def measure_stage_times(pipe: WanI2VPipeline, batch: int = 1,
+                        n_warm: int = 1, n_iter: int = 3) -> Dict[str, float]:
+    """Per-stage wall times — feeds Theorem-1 planning and the 16x benchmark."""
+    cfg = pipe.cfg
+    tokens = np.zeros((batch, cfg.text_len), np.int32)
+    image = np.zeros((batch, cfg.image_size, cfg.image_size, 3), np.float32)
+    fns = build_stage_fns(pipe)
+    payload: Any = {"tokens": tokens, "image": image, "seed": 0}
+    times: Dict[str, float] = {}
+    for name in ("text_encode", "vae_encode", "diffusion", "vae_decode"):
+        fn = fns[name]
+        for _ in range(n_warm):
+            out = fn(payload)
+        t0 = time.perf_counter()
+        for _ in range(n_iter):
+            out = fn(payload)
+        times[name] = (time.perf_counter() - t0) / n_iter
+        payload = out
+    return times

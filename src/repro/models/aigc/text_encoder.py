@@ -1,0 +1,52 @@
+"""T5&CLIP stage: a bidirectional transformer text encoder (T5-style)."""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wan_i2v import WanPipelineConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec
+
+Tree = Dict[str, Any]
+
+
+def abstract_params(cfg: WanPipelineConfig, dtype: str = "float32") -> Tree:
+    d, f, h = cfg.text_d_model, cfg.text_d_ff, cfg.text_heads
+    nl = cfg.text_layers
+    hd = d // h
+    return {
+        "embedding": ParamSpec((cfg.text_vocab, d), ("vocab", "embed"), dtype, "small"),
+        "final_norm": ParamSpec((d,), ("embed",), dtype, "zeros"),
+        "layers": {
+            "attn_norm": ParamSpec((nl, d), ("layers", "embed"), dtype, "zeros"),
+            "wq": ParamSpec((nl, d, h, hd), ("layers", "embed", "heads", "head_dim"), dtype),
+            "wk": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "wv": ParamSpec((nl, d, h, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+            "wo": ParamSpec((nl, h, hd, d), ("layers", "heads", "head_dim", "embed"), dtype),
+            "mlp_norm": ParamSpec((nl, d), ("layers", "embed"), dtype, "zeros"),
+            "w1": ParamSpec((nl, d, f), ("layers", "embed", "mlp"), dtype),
+            "w2": ParamSpec((nl, f, d), ("layers", "mlp", "embed"), dtype),
+        },
+    }
+
+
+def encode_text(params: Tree, tokens: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+    """tokens: [B, T] -> conditioning embeddings [B, T, D]."""
+    x = jnp.take(params["embedding"], tokens, axis=0)
+
+    def body(xx, lp):
+        h = L.rms_norm(xx, lp["attn_norm"])
+        q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
+        k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
+        v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
+        att = L.attention_full(q, k, v, causal=False)
+        xx = xx + jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
+        h = L.rms_norm(xx, lp["mlp_norm"])
+        xx = xx + jax.nn.gelu(h @ lp["w1"]) @ lp["w2"]
+        return xx, None
+
+    x, _ = jax.lax.scan(body, x, params["layers"])
+    return L.rms_norm(x, params["final_norm"])

@@ -1,0 +1,86 @@
+"""VAE encode/decode stages: convolutional autoencoder on pixel frames.
+
+A real conv VAE (jax.lax.conv_general_dilated), not a stub — the paper's
+workflow moves VAE encode/decode onto their own instances precisely because
+their compute/memory profile differs from the diffusion stage.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.wan_i2v import WanPipelineConfig
+from repro.models.param import ParamSpec
+
+Tree = Dict[str, Any]
+
+
+def _conv_spec(cin: int, cout: int, name_dtype: str) -> ParamSpec:
+    return ParamSpec((3, 3, cin, cout), (None, None, None, "conv"), name_dtype)
+
+
+def abstract_params(cfg: WanPipelineConfig, dtype: str = "float32") -> Tree:
+    ch = cfg.vae_base_ch
+    enc, dec = {}, {}
+    cin = 3
+    for i in range(cfg.vae_downs):
+        cout = ch * (2 ** i)
+        enc[f"down{i}_a"] = _conv_spec(cin, cout, dtype)
+        enc[f"down{i}_b"] = _conv_spec(cout, cout, dtype)
+        cin = cout
+    enc["to_latent"] = _conv_spec(cin, 2 * cfg.vae_latent_ch, dtype)  # mu, logvar
+    cin2 = cfg.vae_latent_ch
+    for i in reversed(range(cfg.vae_downs)):
+        cout = ch * (2 ** i)
+        dec[f"up{i}_a"] = _conv_spec(cin2, cout, dtype)
+        dec[f"up{i}_b"] = _conv_spec(cout, cout, dtype)
+        cin2 = cout
+    dec["to_rgb"] = _conv_spec(cin2, 3, dtype)
+    return {"encoder": enc, "decoder": dec}
+
+
+def _conv(x, w, stride: int = 1):
+    return jax.lax.conv_general_dilated(
+        x, w, window_strides=(stride, stride), padding="SAME",
+        dimension_numbers=("NHWC", "HWIO", "NHWC"),
+    )
+
+
+def encode(params: Tree, frames: jax.Array, cfg: WanPipelineConfig,
+           rng: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """frames: [B,H,W,3] -> (latent sample, mu, logvar) [B,h,w,C_lat]."""
+    x = frames
+    for i in range(cfg.vae_downs):
+        x = jax.nn.silu(_conv(x, params["encoder"][f"down{i}_a"], stride=2))
+        x = x + jax.nn.silu(_conv(x, params["encoder"][f"down{i}_b"]))
+    stats = _conv(x, params["encoder"]["to_latent"])
+    mu, logvar = jnp.split(stats, 2, axis=-1)
+    logvar = jnp.clip(logvar, -10.0, 10.0)
+    z = mu + jnp.exp(0.5 * logvar) * jax.random.normal(rng, mu.shape, mu.dtype)
+    return z, mu, logvar
+
+
+def _upsample2(x):
+    b, h, w, c = x.shape
+    return jnp.repeat(jnp.repeat(x, 2, axis=1), 2, axis=2)
+
+
+def decode(params: Tree, z: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+    """z: [B,h,w,C_lat] -> frames [B,H,W,3]."""
+    x = z
+    for i in reversed(range(cfg.vae_downs)):
+        x = _upsample2(x)
+        x = jax.nn.silu(_conv(x, params["decoder"][f"up{i}_a"]))
+        x = x + jax.nn.silu(_conv(x, params["decoder"][f"up{i}_b"]))
+    return jnp.tanh(_conv(x, params["decoder"]["to_rgb"]))
+
+
+def vae_loss(params, frames, cfg, rng):
+    """Reconstruction + KL (for the training example)."""
+    z, mu, logvar = encode(params, frames, cfg, rng)
+    recon = decode(params, z, cfg)
+    rec = jnp.mean((recon - frames) ** 2)
+    kl = -0.5 * jnp.mean(1 + logvar - mu ** 2 - jnp.exp(logvar))
+    return rec + 1e-4 * kl, {"rec": rec, "kl": kl}

@@ -1,0 +1,224 @@
+"""Whisper-style encoder-decoder (arXiv:2212.04356) — [audio] family.
+
+The mel-spectrogram + conv2 frontend is a STUB per the assignment:
+the encoder consumes precomputed frame embeddings [B, frontend_tokens, D]
+from ``input_specs()``.  Sinusoidal positions on both sides (deviation:
+whisper's decoder uses learned positions bounded at 448; sinusoidal keeps
+the decode shapes length-agnostic — noted in DESIGN.md).
+
+Decode: self-attention KV cache of the shape's seq_len + per-layer
+cross-attention K/V computed once from the encoder output at prefill.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec, constrain
+
+Tree = Dict[str, Any]
+
+
+def _sinusoid(positions: jax.Array, d: int) -> jax.Array:
+    half = d // 2
+    freqs = jnp.exp(-jnp.arange(half, dtype=jnp.float32) * (jnp.log(10000.0) / (half - 1)))
+    ang = positions.astype(jnp.float32)[..., None] * freqs
+    return jnp.concatenate([jnp.sin(ang), jnp.cos(ang)], axis=-1)
+
+
+def _attn_specs(cfg, n, dtype, prefix=""):
+    d, h, kv, hd = cfg.d_model, cfg.num_heads, cfg.resolved_kv_heads, cfg.resolved_head_dim
+    return {
+        prefix + "norm": ParamSpec((n, d), ("layers", "embed"), dtype, "zeros"),
+        prefix + "wq": ParamSpec((n, d, h, hd), ("layers", "embed", "heads", "head_dim"), dtype),
+        prefix + "wk": ParamSpec((n, d, kv, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+        prefix + "wv": ParamSpec((n, d, kv, hd), ("layers", "embed", "kv_heads", "head_dim"), dtype),
+        prefix + "wo": ParamSpec((n, h, hd, d), ("layers", "heads", "head_dim", "embed"), dtype),
+    }
+
+
+def _mlp_specs(cfg, n, dtype):
+    d, f = cfg.d_model, cfg.d_ff
+    return {
+        "mlp_norm": ParamSpec((n, d), ("layers", "embed"), dtype, "zeros"),
+        "w1": ParamSpec((n, d, f), ("layers", "embed", "mlp"), dtype),
+        "w2": ParamSpec((n, f, d), ("layers", "mlp", "embed"), dtype),
+    }
+
+
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = cfg.dtype
+    enc = _attn_specs(cfg, cfg.encoder_layers, dt)
+    enc.update(_mlp_specs(cfg, cfg.encoder_layers, dt))
+    dec = _attn_specs(cfg, cfg.num_layers, dt)
+    dec.update(_attn_specs(cfg, cfg.num_layers, dt, prefix="x_"))
+    dec.update(_mlp_specs(cfg, cfg.num_layers, dt))
+    return {
+        "embedding": ParamSpec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), dt, "small"),
+        "enc_final_norm": ParamSpec((cfg.d_model,), ("embed",), dt, "zeros"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), dt, "zeros"),
+        "encoder": enc,
+        "decoder": dec,
+    }
+
+
+def _proj_qkv(h, lp, prefix=""):
+    q = jnp.einsum("bsd,dhk->bshk", h, lp[prefix + "wq"])
+    k = jnp.einsum("bsd,dhk->bshk", h, lp[prefix + "wk"])
+    v = jnp.einsum("bsd,dhk->bshk", h, lp[prefix + "wv"])
+    return q, k, v
+
+
+def _mlp(x, lp, cfg):
+    h = L.rms_norm(x, lp["mlp_norm"], cfg.norm_eps)
+    h = jax.nn.gelu(h @ lp["w1"])
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ lp["w2"]
+
+
+def encode(params: Tree, frames: jax.Array, cfg: ModelConfig, *, remat=False) -> jax.Array:
+    """frames: [B, F, D] stub embeddings -> encoder hidden [B, F, D]."""
+    b, f, d = frames.shape
+    x = frames + _sinusoid(jnp.arange(f), d)[None].astype(frames.dtype)
+    x = constrain(x, "batch", "seq_res", "act_embed")
+
+    def body(xx, lp):
+        h = L.rms_norm(xx, lp["norm"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, lp)
+        att = L.attention_full(q, k, v, causal=False)
+        xx = xx + jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
+        xx = xx + _mlp(xx, lp, cfg)
+        return constrain(xx, "batch", "seq_res", "act_embed"), None
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    x, _ = jax.lax.scan(body, x, params["encoder"])
+    return L.rms_norm(x, params["enc_final_norm"], cfg.norm_eps)
+
+
+def _decoder_stack(params, x, enc_out, cfg, mode, cache, cur_index, remat):
+    """x: [B,S,D] decoder embeddings (with positions added)."""
+
+    def body(carry, xs):
+        xx = carry
+        lp, c = xs
+        # self attention
+        h = L.rms_norm(xx, lp["norm"], cfg.norm_eps)
+        q, k, v = _proj_qkv(h, lp)
+        cd = jnp.dtype(cfg.resolved_cache_dtype)
+        if mode == "decode":
+            ck, cv, xk, xv = c  # caches in [B,KV,S,hd] layout
+            k1 = k[:, 0][:, :, None].astype(cd)
+            v1 = v[:, 0][:, :, None].astype(cd)
+            ck = jax.lax.dynamic_update_slice_in_dim(ck, k1, cur_index, 2)
+            cv = jax.lax.dynamic_update_slice_in_dim(cv, v1, cur_index, 2)
+            att = L.attention_decode(q[:, 0], ck, cv, cur_index)[:, None]
+            nc_self = (ck, cv)
+        else:
+            s = xx.shape[1]
+            if s > 2048:
+                att = L.attention_blockwise(q, k, v, causal=True)
+            else:
+                att = L.attention_full(q, k, v, causal=True)
+            nc_self = (k.transpose(0, 2, 1, 3).astype(cd),
+                       v.transpose(0, 2, 1, 3).astype(cd))
+        xx = xx + jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
+        # cross attention
+        h = L.rms_norm(xx, lp["x_norm"], cfg.norm_eps)
+        qx = jnp.einsum("bsd,dhk->bshk", h, lp["x_wq"])
+        if mode == "decode":
+            # cross K/V cached in [B,KV,F,hd] layout
+            attx = L.attention_decode(qx[:, 0], xk, xv,
+                                      jnp.int32(xk.shape[2] - 1))[:, None]
+            nc_cross = (xk, xv)
+        else:
+            kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wk"])
+            vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wv"])
+            attx = L.attention_full(qx, kx, vx, causal=False)
+            cd = jnp.dtype(cfg.resolved_cache_dtype)
+            nc_cross = (kx.transpose(0, 2, 1, 3).astype(cd),
+                        vx.transpose(0, 2, 1, 3).astype(cd))
+        xx = xx + jnp.einsum("bshk,hkd->bsd", attx, lp["x_wo"])
+        xx = xx + _mlp(xx, lp, cfg)
+        xx = constrain(xx, "batch", "seq_res", "act_embed")
+        if mode == "train":
+            return xx, None
+        return xx, nc_self + nc_cross
+
+    if remat:
+        body = jax.checkpoint(body, policy=jax.checkpoint_policies.nothing_saveable)
+    cs = cache.get("decoder") if cache else None
+    x, ncs = jax.lax.scan(body, x, (params["decoder"], cs))
+    return x, ({"decoder": ncs} if ncs is not None else None)
+
+
+def _embed_tokens(params, tokens, cfg, positions):
+    x = jnp.take(params["embedding"], tokens, axis=0)
+    x = x + _sinusoid(positions, cfg.d_model).astype(x.dtype)
+    return constrain(x, "batch", "seq_res", "act_embed")
+
+
+def loss_fn(params: Tree, batch: Tree, cfg: ModelConfig, **_):
+    """batch: frames [B,F,D], tokens [B,S], labels [B,S]."""
+    enc = encode(params, batch["frames"], cfg, remat=True)
+    s = batch["tokens"].shape[1]
+    x = _embed_tokens(params, batch["tokens"], cfg, jnp.arange(s))
+    x, _ = _decoder_stack(params, x, enc, cfg, "train", None, None, remat=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = L.chunked_cross_entropy(x, params["embedding"].T, batch["labels"])
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def prefill(params: Tree, batch: Tree, cfg: ModelConfig, **_):
+    enc = encode(params, batch["frames"], cfg)
+    s = batch["tokens"].shape[1]
+    x = _embed_tokens(params, batch["tokens"], cfg, jnp.arange(s))
+    x, cache = _decoder_stack(params, x, enc, cfg, "prefill", None, None, remat=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, -1] @ params["embedding"].T).astype(jnp.float32), cache
+
+
+def decode_step(params: Tree, cache: Tree, batch: Tree, cfg: ModelConfig, **_):
+    """cache: decoder = (self_k, self_v, cross_k, cross_v) stacked [L,...]."""
+    cur = batch["cur_index"]
+    x = _embed_tokens(params, batch["tokens"][:, None], cfg,
+                      jnp.full((1,), cur, jnp.int32))
+    x, ncache = _decoder_stack(params, x, None, cfg, "decode", cache, cur, remat=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, 0] @ params["embedding"].T).astype(jnp.float32), ncache
+
+
+def make_decode_cache(params: Tree, frames: jax.Array, cfg: ModelConfig,
+                      max_len: int) -> Tree:
+    """Encode the (stub) frames and build a decode-ready cache: zero self
+    K/V of max_len + per-layer cross K/V computed once from the encoder."""
+    enc = encode(params, frames, cfg)
+    b = frames.shape[0]
+    kv, hd, nl = cfg.resolved_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    dt = jnp.dtype(cfg.resolved_cache_dtype)
+
+    kx = jnp.einsum("bsd,ldhk->lbhsk", enc, params["decoder"]["x_wk"]).astype(dt)
+    vx = jnp.einsum("bsd,ldhk->lbhsk", enc, params["decoder"]["x_wv"]).astype(dt)
+    zeros = jnp.zeros((nl, b, kv, max_len, hd), dt)
+    return {"decoder": (zeros, jnp.copy(zeros), kx, vx)}
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Tree:
+    kv, hd, nl = cfg.resolved_kv_heads, cfg.resolved_head_dim, cfg.num_layers
+    dt = cfg.resolved_cache_dtype
+    self_shape = (nl, batch, kv, seq_len, hd)
+    cross_shape = (nl, batch, kv, cfg.frontend_tokens, hd)
+    log = ("layers", "batch", "cache_kv_heads", "cache_seq", None)
+    logx = ("layers", "batch", "cache_kv_heads", None, None)
+    return {
+        "decoder": (
+            ParamSpec(self_shape, log, dt, "zeros"),
+            ParamSpec(self_shape, log, dt, "zeros"),
+            ParamSpec(cross_shape, logx, dt, "zeros"),
+            ParamSpec(cross_shape, logx, dt, "zeros"),
+        )
+    }

@@ -1,0 +1,327 @@
+"""Shared model layers: norms, RoPE, attention (full / blockwise-online-
+softmax / decode), SwiGLU MLP, chunked cross-entropy.
+
+The blockwise attention here is the memory-safe pure-JAX path used by every
+full-size model (32k prefill would otherwise materialize S^2 scores); it is
+also the oracle the Pallas flash kernels are validated against.
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+from repro.models.param import constrain
+
+NEG_INF = -1e30
+
+
+def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * (1.0 + w.astype(jnp.float32))).astype(dt)
+
+
+# ------------------------------------------------------------------- RoPE
+def rope_freqs(positions: jax.Array, head_dim: int, theta: float, rotary_dim: int = 0):
+    """positions [...]->(sin,cos) of shape [..., rotary_dim//2]."""
+    rd = rotary_dim or head_dim
+    inv = 1.0 / (theta ** (jnp.arange(0, rd, 2, dtype=jnp.float32) / rd))
+    ang = positions.astype(jnp.float32)[..., None] * inv
+    return jnp.sin(ang), jnp.cos(ang)
+
+
+def apply_rope(x: jax.Array, sin: jax.Array, cos: jax.Array, rotary_dim: int = 0):
+    """x [B,S,H,hd]; sin/cos [B,S,rd/2] or [S,rd/2]. Rotates first rd dims."""
+    rd = rotary_dim or x.shape[-1]
+    if sin.ndim == 2:  # [S, rd/2] -> [1,S,1,rd/2]
+        sin, cos = sin[None, :, None, :], cos[None, :, None, :]
+    else:  # [B,S,rd/2] -> [B,S,1,rd/2]
+        sin, cos = sin[:, :, None, :], cos[:, :, None, :]
+    xr, xp = x[..., :rd], x[..., rd:]
+    x1, x2 = xr[..., ::2], xr[..., 1::2]
+    o1 = x1 * cos - x2 * sin
+    o2 = x2 * cos + x1 * sin
+    rot = jnp.stack([o1, o2], axis=-1).reshape(xr.shape).astype(x.dtype)
+    return jnp.concatenate([rot, xp], axis=-1) if rd < x.shape[-1] else rot
+
+
+# -------------------------------------------------------------- attention
+def _group_q(q: jax.Array, n_kv: int):
+    b, s, h, d = q.shape
+    return q.reshape(b, s, n_kv, h // n_kv, d)
+
+
+def attention_full(
+    q: jax.Array,  # [B,S,H,hd]
+    k: jax.Array,  # [B,S,KV,hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_positions: Optional[jax.Array] = None,
+) -> jax.Array:
+    """Naive full attention — smoke-scale oracle."""
+    b, s, h, d = q.shape
+    kv = k.shape[2]
+    qg = _group_q(q, kv) * (d ** -0.5)
+    scores = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32)
+    qpos = jnp.arange(s) if q_positions is None else q_positions
+    kpos = jnp.arange(k.shape[1])
+    mask = jnp.ones((s, k.shape[1]), bool)
+    if causal:
+        mask &= qpos[:, None] >= kpos[None, :]
+    if window:
+        mask &= kpos[None, :] > qpos[:, None] - window
+    scores = jnp.where(mask[None, None, None], scores, NEG_INF)
+    probs = jax.nn.softmax(scores, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngst,btnd->bsngd", probs, v)
+    return out.reshape(b, s, h, d)
+
+
+def attention_blockwise(
+    q: jax.Array,  # [B,S,H,hd]
+    k: jax.Array,  # [B,S,KV,hd]
+    v: jax.Array,
+    *,
+    causal: bool = True,
+    window: int = 0,
+    q_block: int = 512,
+    kv_block: int = 1024,
+    causal_skip: bool = False,
+) -> jax.Array:
+    """Memory-safe attention: scan over q blocks; global layers run an inner
+    online-softmax scan over kv blocks (flash-style), windowed layers slice a
+    static [window + q_block] kv span per q block (so window layers cost
+    O(S * window), not O(S^2) — this is what makes gemma3 local layers and
+    long-context serving affordable)."""
+    b, s, h, d = q.shape
+    kv_heads = k.shape[2]
+    g = h // kv_heads
+    q_block = min(q_block, s)
+    while s % q_block:
+        q_block //= 2
+    nq = s // q_block
+    scale = d ** -0.5
+
+    # NOTE: each q-block body is checkpointed. The body has no carry, so the
+    # scan's backward saves only the closure (q,k,v once) instead of stacking
+    # per-iteration probability tensors [nq, nk, B, KV, G, bq, bk] — that
+    # stack was 15-60 GB/chip for the 4k-train shapes before this.
+    if window:
+        span = window + q_block
+        span = min(span, s)
+
+        @jax.checkpoint
+        def qstep(_, i):
+            qs = i * q_block
+            qi = jax.lax.dynamic_slice_in_dim(q, qs, q_block, 1) * scale
+            start = jnp.clip(qs + q_block - span, 0, s - span)
+            ki = jax.lax.dynamic_slice_in_dim(k, start, span, 1)
+            vi = jax.lax.dynamic_slice_in_dim(v, start, span, 1)
+            qg = qi.reshape(b, q_block, kv_heads, g, d)
+            sc = jnp.einsum("bsngd,btnd->bngst", qg, ki).astype(jnp.float32)
+            qpos = qs + jnp.arange(q_block)
+            kpos = start + jnp.arange(span)
+            m = (qpos[:, None] >= kpos[None, :]) & (kpos[None, :] > qpos[:, None] - window)
+            sc = jnp.where(m[None, None, None], sc, NEG_INF)
+            pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+            oi = jnp.einsum("bngst,btnd->bsngd", pr, vi).reshape(b, q_block, h, d)
+            return None, oi
+
+        _, blocks = jax.lax.scan(qstep, None, jnp.arange(nq))
+        return blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+    kv_block = min(kv_block, s)
+    while s % kv_block:
+        kv_block //= 2
+    nk = s // kv_block
+
+    if causal and causal_skip and nq <= 16:
+        # §Perf: statically-unrolled q blocks, each attending only to its
+        # causal kv prefix — removes the ~2x masked-but-computed upper
+        # triangle of the scan baseline (dominant FLOP term for thin-FFN
+        # archs like granite-moe; see EXPERIMENTS.md §Perf).  Each block is
+        # checkpointed so autodiff saves no probability tensors.
+        # (NOTE §Perf A3: explicitly constraining k/v to seq-replicated here
+        # to pre-gather once was tried and REGRESSED — XLA repartitioned the
+        # dots and tripled compute; leave resharding to SPMD.)
+        @functools.partial(jax.checkpoint, static_argnums=(3,))
+        def qblock(qi_blk, ki, vi, qs):
+            qg = (qi_blk * scale).reshape(b, q_block, kv_heads, g, d)
+            sc = jnp.einsum("bsngd,btnd->bngst", qg, ki).astype(jnp.float32)
+            qpos = qs + jnp.arange(q_block)
+            kpos = jnp.arange(ki.shape[1])
+            msk = qpos[:, None] >= kpos[None, :]
+            sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+            return jnp.einsum("bngst,btnd->bsngd", pr, vi).reshape(b, q_block, h, d)
+
+        outs = []
+        for qi in range(nq):
+            qs = qi * q_block
+            span = qs + q_block  # static causal prefix
+            outs.append(qblock(q[:, qs : qs + q_block], k[:, :span], v[:, :span], qs))
+        return jnp.concatenate(outs, axis=1)
+
+    @jax.checkpoint
+    def qstep(_, i):
+        qs = i * q_block
+        qi = jax.lax.dynamic_slice_in_dim(q, qs, q_block, 1) * scale
+        qg = qi.reshape(b, q_block, kv_heads, g, d)
+        qpos = qs + jnp.arange(q_block)
+        m0 = jnp.full((b, kv_heads, g, q_block), NEG_INF, jnp.float32)
+        l0 = jnp.zeros((b, kv_heads, g, q_block), jnp.float32)
+        a0 = jnp.zeros((b, kv_heads, g, q_block, d), jnp.float32)
+
+        def kstep(carry, j):
+            mx, l, acc = carry
+            ks = j * kv_block
+            ki = jax.lax.dynamic_slice_in_dim(k, ks, kv_block, 1)
+            vi = jax.lax.dynamic_slice_in_dim(v, ks, kv_block, 1)
+            sc = jnp.einsum("bsngd,btnd->bngst", qg, ki).astype(jnp.float32)
+            if causal:
+                kpos = ks + jnp.arange(kv_block)
+                msk = qpos[:, None] >= kpos[None, :]
+                sc = jnp.where(msk[None, None, None], sc, NEG_INF)
+            # clamp keeps exp() at exactly 0 for fully-masked blocks
+            bm = jnp.maximum(jnp.maximum(mx, sc.max(axis=-1)), -1e29)
+            p = jnp.exp(sc - bm[..., None])
+            corr = jnp.exp(mx - bm)
+            l2 = l * corr + p.sum(axis=-1)
+            acc2 = acc * corr[..., None] + jnp.einsum(
+                "bngst,btnd->bngsd", p.astype(vi.dtype), vi
+            ).astype(jnp.float32)
+            return (bm, l2, acc2), None
+
+        # NOTE(perf): baseline scans ALL kv blocks (masked) — ~2x causal
+        # FLOPs; the §Perf causal-skip variant trims this (see EXPERIMENTS.md).
+        (mx, l, acc), _ = jax.lax.scan(kstep, (m0, l0, a0), jnp.arange(nk))
+        oi = (acc / jnp.maximum(l[..., None], 1e-30)).astype(q.dtype)
+        oi = oi.transpose(0, 3, 1, 2, 4).reshape(b, q_block, h, d)
+        return None, oi
+
+    _, blocks = jax.lax.scan(qstep, None, jnp.arange(nq))
+    return blocks.transpose(1, 0, 2, 3, 4).reshape(b, s, h, d)
+
+
+def attention_decode(
+    q: jax.Array,       # [B,H,hd] — one new token per sequence
+    k_cache: jax.Array,  # [B,KV,Smax,hd] — GEMM-friendly serving layout:
+    v_cache: jax.Array,  # per (b,kv) head the [S,hd] matrix is contiguous,
+    cur_index: jax.Array,  # so both dots run without relayout copies
+    *,
+    window: int = 0,
+) -> jax.Array:
+    b, h, d = q.shape
+    kvh = k_cache.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d) * (d ** -0.5)
+    sc = jnp.einsum("bngd,bntd->bngt", qg, k_cache).astype(jnp.float32)
+    pos = jnp.arange(k_cache.shape[2])
+    valid = pos <= cur_index
+    if window:
+        valid &= pos > cur_index - window
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngt,bntd->bngd", pr, v_cache)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def quantize_token_kv(x: jax.Array):
+    """x: [B,KV,1,hd] -> (int8 values, f32 scale [B,KV,1]) absmax per head."""
+    absmax = jnp.max(jnp.abs(x.astype(jnp.float32)), axis=-1)
+    scale = jnp.maximum(absmax / 127.0, 1e-8)
+    q = jnp.clip(jnp.round(x.astype(jnp.float32) / scale[..., None]),
+                 -127, 127).astype(jnp.int8)
+    return q, scale
+
+
+def attention_decode_int8(
+    q: jax.Array,        # [B,H,hd]
+    k_q: jax.Array,      # int8 [B,KV,Smax,hd]
+    v_q: jax.Array,
+    k_s: jax.Array,      # f32 [B,KV,Smax]
+    v_s: jax.Array,
+    cur_index: jax.Array,
+) -> jax.Array:
+    """int8-cache decode attention: scales fold into the scores (k) and the
+    probabilities (v), so the quantized cache feeds the dots directly —
+    HBM traffic is 1/2 of bf16 / 1/4 of f32 caches (§Perf pair C)."""
+    b, h, d = q.shape
+    kvh = k_q.shape[1]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d).astype(jnp.float32) * (d ** -0.5)
+    sc = jnp.einsum("bngd,bntd->bngt", qg, k_q.astype(jnp.float32))
+    sc = sc * k_s[:, :, None, :]
+    pos = jnp.arange(k_q.shape[2])
+    sc = jnp.where((pos <= cur_index)[None, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1)
+    pv = pr * v_s[:, :, None, :]
+    out = jnp.einsum("bngt,bntd->bngd", pv, v_q.astype(jnp.float32))
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+def attention_decode_ring(
+    q: jax.Array,       # [B,H,hd]
+    k_cache: jax.Array,  # [B,KV,W,hd] ring: slot s holds abs pos cur-((cur-s) mod W)
+    v_cache: jax.Array,
+    cur_index: jax.Array,
+) -> jax.Array:
+    """Decode attention over a sliding-window ring cache."""
+    b, h, d = q.shape
+    kvh, w = k_cache.shape[1], k_cache.shape[2]
+    g = h // kvh
+    qg = q.reshape(b, kvh, g, d) * (d ** -0.5)
+    sc = jnp.einsum("bngd,bntd->bngt", qg, k_cache).astype(jnp.float32)
+    slots = jnp.arange(w)
+    abs_pos = cur_index - ((cur_index - slots) % w)
+    valid = abs_pos >= 0  # ring always spans (cur-W, cur]
+    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
+    out = jnp.einsum("bngt,bntd->bngd", pr, v_cache)
+    return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ------------------------------------------------------------------- MLP
+def swiglu(x: jax.Array, w_gate: jax.Array, w_up: jax.Array, w_down: jax.Array):
+    h = jax.nn.silu(x @ w_gate) * (x @ w_up)
+    h = constrain(h, "batch", "seq", "act_mlp")
+    return h @ w_down
+
+
+# ------------------------------------------------------- chunked CE loss
+def chunked_cross_entropy(
+    hidden: jax.Array,      # [B,S,D]
+    unembed: jax.Array,     # [D,V]
+    labels: jax.Array,      # [B,S] int32
+    *,
+    chunk: int = 512,
+) -> jax.Array:
+    """Mean CE without materializing [B,S,V] logits (scan over seq chunks,
+    rematerialized in backward)."""
+    b, s, d = hidden.shape
+    chunk = min(chunk, s)
+    while s % chunk:
+        chunk //= 2
+    n = s // chunk
+
+    vocab_iota = jnp.arange(unembed.shape[-1])
+
+    @jax.checkpoint
+    def body(tot, i):
+        h = jax.lax.dynamic_slice_in_dim(hidden, i * chunk, chunk, 1)
+        y = jax.lax.dynamic_slice_in_dim(labels, i * chunk, chunk, 1)
+        logits = (h @ unembed).astype(jnp.float32)
+        logits = constrain(logits, "batch", "seq", "act_vocab")
+        lse = jax.nn.logsumexp(logits, axis=-1)
+        # NOT take_along_axis: a gather across the vocab-sharded dim makes
+        # SPMD replicate the full logits chunk; a masked reduce shards clean.
+        gold = jnp.sum(jnp.where(vocab_iota == y[..., None], logits, 0.0), axis=-1)
+        return tot + jnp.sum(lse - gold), None
+
+    tot, _ = jax.lax.scan(body, jnp.zeros((), jnp.float32), jnp.arange(n))
+    return tot / (b * s)

@@ -1,0 +1,314 @@
+"""Mamba2 (SSD) blocks and the Zamba2 hybrid (arXiv:2411.15242).
+
+Mamba2 block: in-proj -> (z, xBC, dt); depthwise causal conv over xBC;
+selective state-space recurrence
+    S_t = exp(dt_t * A) S_{t-1} + (dt_t x_t) B_t^T ,   y_t = S_t C_t + D x_t
+with per-head scalar A; gated RMSNorm; out-proj.
+
+Zamba2: a stack of Mamba2 layers with ONE shared transformer block
+(attention + SwiGLU, weights reused) applied after every
+``hybrid_attn_every`` SSM layers — scan over periods with the shared block
+closed over.  Decode state: per-layer (conv_state [B,conv_dim,3],
+ssd_state [B,H,hd,d_state]) + a KV cache per shared-block application.
+"""
+from __future__ import annotations
+
+from typing import Any, Dict, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import layers as L
+from repro.models.param import ParamSpec, constrain
+
+Tree = Dict[str, Any]
+CONV_WIDTH = 4
+N_GROUPS = 1
+
+
+def _dims(cfg: ModelConfig):
+    d_inner = cfg.d_inner
+    n_heads = d_inner // cfg.ssm_head_dim
+    conv_dim = d_inner + 2 * N_GROUPS * cfg.ssm_state
+    d_in_proj = 2 * d_inner + 2 * N_GROUPS * cfg.ssm_state + n_heads
+    return d_inner, n_heads, conv_dim, d_in_proj
+
+
+def mamba_param_specs(cfg: ModelConfig, nl: int) -> Tree:
+    dt = cfg.dtype
+    d = cfg.d_model
+    d_inner, n_heads, conv_dim, d_in_proj = _dims(cfg)
+    return {
+        "norm": ParamSpec((nl, d), ("layers", "embed"), dt, "zeros"),
+        "w_in": ParamSpec((nl, d, d_in_proj), ("layers", "embed", "ssm_inner"), dt),
+        "conv_w": ParamSpec((nl, conv_dim, CONV_WIDTH), ("layers", "ssm_inner", None), dt),
+        "conv_b": ParamSpec((nl, conv_dim), ("layers", "ssm_inner"), dt, "zeros"),
+        "dt_bias": ParamSpec((nl, n_heads), ("layers", "ssm_heads"), "float32", "zeros"),
+        "a_log": ParamSpec((nl, n_heads), ("layers", "ssm_heads"), "float32", "zeros"),
+        "d_skip": ParamSpec((nl, n_heads), ("layers", "ssm_heads"), "float32", "ones"),
+        "gn_w": ParamSpec((nl, d_inner), ("layers", "ssm_inner"), dt, "zeros"),
+        "w_out": ParamSpec((nl, d_inner, d), ("layers", "ssm_inner", "embed"), dt),
+    }
+
+
+# ----------------------------------------------------------------- ssd core
+def ssd_scan(x, dt, a, B, C, state, chunk: int = 256):
+    """x: [B,T,H,P]; dt/a: [B,T,H]; B/C: [B,T,N]; state: [B,H,P,N].
+    Returns (y [B,T,H,P], final state).  Chunked + checkpointed so the
+    backward saves state per chunk, not per step (cf. rwkv6.wkv6_scan)."""
+
+    def step(s, xs):
+        xt, dtt, at, bt, ct = xs
+        s = at[..., None, None] * s + jnp.einsum(
+            "bhp,bn->bhpn", xt * dtt[..., None], bt
+        )
+        y = jnp.einsum("bhpn,bn->bhp", s, ct)
+        return s, y
+
+    bsz, t = x.shape[0], x.shape[1]
+    chunk = min(chunk, t)
+    while t % chunk:
+        chunk //= 2
+    nc = t // chunk
+    xs = jax.tree.map(
+        lambda v: v.reshape(v.shape[0], nc, chunk, *v.shape[2:]).swapaxes(0, 1),
+        (x, dt, a, B, C),
+    )
+
+    @jax.checkpoint
+    def chunk_body(s, xs_c):
+        xs_t = jax.tree.map(lambda v: v.swapaxes(0, 1), xs_c)
+        s, ys = jax.lax.scan(step, s, xs_t)
+        return s, ys.swapaxes(0, 1)
+
+    state, ys = jax.lax.scan(chunk_body, state, xs)
+    ys = ys.swapaxes(0, 1).reshape(bsz, t, *ys.shape[3:])
+    return ys, state
+
+
+def ssd_step(x, dt, a, B, C, state):
+    """Single token: x [B,H,P], dt/a [B,H], B/C [B,N]."""
+    state = a[..., None, None] * state + jnp.einsum(
+        "bhp,bn->bhpn", x * dt[..., None], B
+    )
+    y = jnp.einsum("bhpn,bn->bhp", state, C)
+    return y, state
+
+
+def _causal_conv_seq(x, w, b):
+    """Depthwise causal conv, x: [B,T,C], w: [C,W]."""
+    pads = [jnp.pad(x, ((0, 0), (CONV_WIDTH - 1 - i, i), (0, 0)))[:, : x.shape[1]]
+            for i in range(CONV_WIDTH)]
+    out = sum(p * w[None, None, :, i] for i, p in enumerate(pads))
+    return out + b[None, None]
+
+
+def _gated_norm(y, z, w, eps):
+    return L.rms_norm(y * jax.nn.silu(z), w, eps)
+
+
+def mamba_layer(x, lp, cfg: ModelConfig, cache, seq_mode: bool):
+    """cache: (conv_state [B,conv_dim,W-1], ssd_state [B,H,P,N])."""
+    bsz, t, d = x.shape
+    d_inner, n_heads, conv_dim, _ = _dims(cfg)
+    hd, ns = cfg.ssm_head_dim, cfg.ssm_state
+    conv_state, ssd_state = cache
+
+    xn = L.rms_norm(x, lp["norm"], cfg.norm_eps)
+    zxbcdt = xn @ lp["w_in"]
+    z = zxbcdt[..., :d_inner]
+    xBC = zxbcdt[..., d_inner : d_inner + conv_dim]
+    dt_raw = zxbcdt[..., d_inner + conv_dim :]  # [B,T,H]
+
+    if seq_mode:
+        xBC_conv = jax.nn.silu(_causal_conv_seq(xBC, lp["conv_w"], lp["conv_b"]))
+        # keep last W-1 inputs for decode continuation
+        new_conv = xBC[:, -(CONV_WIDTH - 1) :].swapaxes(1, 2) if t >= CONV_WIDTH - 1 \
+            else jnp.concatenate([conv_state, xBC.swapaxes(1, 2)], -1)[..., -(CONV_WIDTH - 1):]
+    else:
+        hist = jnp.concatenate([conv_state, xBC.swapaxes(1, 2)], axis=-1)  # [B,C,W]
+        out = (hist * lp["conv_w"][None]).sum(-1) + lp["conv_b"][None]
+        xBC_conv = jax.nn.silu(out)[:, None]
+        new_conv = hist[..., 1:]
+
+    xs = xBC_conv[..., :d_inner].reshape(bsz, t, n_heads, hd)
+    Bm = xBC_conv[..., d_inner : d_inner + ns]
+    Cm = xBC_conv[..., d_inner + ns :]
+    dtv = jax.nn.softplus(dt_raw.astype(jnp.float32) + lp["dt_bias"])
+    a = jnp.exp(-jnp.exp(lp["a_log"]) * dtv)  # [B,T,H]
+    xs32 = xs.astype(jnp.float32)
+    if seq_mode:
+        y, new_ssd = ssd_scan(xs32, dtv, a, Bm.astype(jnp.float32),
+                              Cm.astype(jnp.float32), ssd_state)
+    else:
+        y, new_ssd = ssd_step(xs32[:, 0], dtv[:, 0], a[:, 0],
+                              Bm.astype(jnp.float32)[:, 0],
+                              Cm.astype(jnp.float32)[:, 0], ssd_state)
+        y = y[:, None]
+    y = y + lp["d_skip"][None, None, :, None] * xs32
+    y = y.reshape(bsz, t, d_inner).astype(x.dtype)
+    out = _gated_norm(y, z, lp["gn_w"], cfg.norm_eps) @ lp["w_out"]
+    out = constrain(x + out, "batch", "seq_res", "act_embed")
+    return out, (new_conv, new_ssd)
+
+
+# ------------------------------------------------------- zamba2 shared block
+def shared_block_specs(cfg: ModelConfig) -> Tree:
+    from repro.models.transformer import _attn_specs, _mlp_specs
+
+    p = _attn_specs(cfg, 1, cfg.dtype)
+    p.update(_mlp_specs(cfg, 1, cfg.dtype))
+    return jax.tree.map(
+        lambda s: ParamSpec(s.shape[1:], s.logical[1:], s.dtype, s.init),
+        p, is_leaf=lambda x: isinstance(x, ParamSpec),
+    )
+
+
+def _shared_block(x, sp, cfg: ModelConfig, mode, cache, cur_index):
+    from repro.models.transformer import _attention, _sincos
+
+    s = x.shape[1]
+    if mode == "decode":
+        positions = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
+    else:
+        positions = jnp.arange(s)[None, :].repeat(x.shape[0], 0)
+    sincos = _sincos(cfg, positions)
+    delta, new_cache = _attention(x, sp, cfg, mode, sincos, 0, cache, cur_index)
+    x = x + delta
+    h = L.rms_norm(x, sp["mlp_norm"], cfg.norm_eps)
+    x = x + L.swiglu(h, sp["w_gate"], sp["w_up"], sp["w_down"])
+    return constrain(x, "batch", "seq_res", "act_embed"), new_cache
+
+
+# ------------------------------------------------------------------ zamba2
+def abstract_params(cfg: ModelConfig) -> Tree:
+    dt = cfg.dtype
+    p: Tree = {
+        "embedding": ParamSpec((cfg.vocab_padded, cfg.d_model), ("vocab", "embed"), dt, "small"),
+        "final_norm": ParamSpec((cfg.d_model,), ("embed",), dt, "zeros"),
+        "unembed": ParamSpec((cfg.d_model, cfg.vocab_padded), ("embed", "vocab"), dt, "small"),
+        "layers": mamba_param_specs(cfg, cfg.num_layers),
+    }
+    if cfg.hybrid_attn_every:
+        p["shared"] = shared_block_specs(cfg)
+    return p
+
+
+def _periods(cfg: ModelConfig) -> Tuple[int, int, int]:
+    every = cfg.hybrid_attn_every or cfg.num_layers
+    return cfg.num_layers // every, every, cfg.num_layers % every
+
+
+def _zero_mamba_cache(cfg: ModelConfig, batch: int, nl: int):
+    d_inner, n_heads, conv_dim, _ = _dims(cfg)
+    dt = jnp.dtype(cfg.dtype)
+    return (
+        jnp.zeros((nl, batch, conv_dim, CONV_WIDTH - 1), dt),
+        jnp.zeros((nl, batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state), jnp.float32),
+    )
+
+
+def _stack(params, x, cfg: ModelConfig, mode, cache, cur_index, remat):
+    n_p, every, tail = _periods(cfg)
+    seq_mode = mode != "decode"
+    n_main = n_p * every
+    shared = params.get("shared")
+
+    mcache = cache["mamba"] if cache else _zero_mamba_cache(cfg, x.shape[0], cfg.num_layers)
+    main_c = jax.tree.map(lambda a: a[:n_main].reshape((n_p, every) + a.shape[1:]), mcache)
+    tail_c = jax.tree.map(lambda a: a[n_main:], mcache)
+    main_p = jax.tree.map(lambda a: a[:n_main].reshape((n_p, every) + a.shape[1:]),
+                          params["layers"])
+    tail_p = jax.tree.map(lambda a: a[n_main:], params["layers"])
+    attn_c = cache.get("attn") if (cache and shared is not None) else None
+
+    def period(carry, xs):
+        xx = carry
+        lp_p, mc_p, ac = xs
+
+        def inner(c2, xs2):
+            lp, mc = xs2
+            y, nmc = mamba_layer(c2, lp, cfg, mc, seq_mode)
+            return y, nmc
+
+        xx, nmc = jax.lax.scan(inner, xx, (lp_p, mc_p))
+        nac = None
+        if shared is not None:
+            xx, nac = _shared_block(xx, shared, cfg, mode, ac, cur_index)
+        return xx, (nmc, nac)
+
+    if remat:
+        period = jax.checkpoint(period, policy=jax.checkpoint_policies.nothing_saveable)
+
+    new_cache: Tree = {}
+    if n_p:
+        x, (nmc_main, nac) = jax.lax.scan(period, x, (main_p, main_c, attn_c))
+    else:
+        nmc_main, nac = None, None
+
+    ntail = []
+    for i in range(tail):
+        lp = jax.tree.map(lambda a: a[i], tail_p)
+        mc = jax.tree.map(lambda a: a[i], tail_c)
+        x, nmc = mamba_layer(x, lp, cfg, mc, seq_mode)
+        ntail.append(nmc)
+
+    if mode != "train":
+        parts = []
+        if nmc_main is not None:
+            parts.append(jax.tree.map(
+                lambda a: a.reshape((n_main,) + a.shape[2:]), nmc_main))
+        if ntail:
+            parts.append(jax.tree.map(lambda *xs: jnp.stack(xs), *ntail))
+        new_cache["mamba"] = jax.tree.map(
+            lambda *xs: jnp.concatenate(xs, 0), *parts
+        ) if len(parts) > 1 else parts[0]
+        if nac is not None:
+            new_cache["attn"] = nac
+    return x, (new_cache or None)
+
+
+def loss_fn(params: Tree, batch: Tree, cfg: ModelConfig, **_):
+    x = jnp.take(params["embedding"], batch["tokens"], axis=0)
+    x = constrain(x, "batch", "seq_res", "act_embed")
+    x, _ = _stack(params, x, cfg, "train", None, None, remat=True)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    ce = L.chunked_cross_entropy(x, params["unembed"], batch["labels"])
+    return ce, {"ce": ce, "aux": 0.0}
+
+
+def prefill(params: Tree, batch: Tree, cfg: ModelConfig, **_):
+    x = jnp.take(params["embedding"], batch["tokens"], axis=0)
+    x, cache = _stack(params, x, cfg, "prefill", None, None, remat=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, -1] @ params["unembed"]).astype(jnp.float32), cache
+
+
+def decode_step(params: Tree, cache: Tree, batch: Tree, cfg: ModelConfig, **_):
+    x = jnp.take(params["embedding"], batch["tokens"][:, None], axis=0)
+    x, ncache = _stack(params, x, cfg, "decode", cache, batch["cur_index"], remat=False)
+    x = L.rms_norm(x, params["final_norm"], cfg.norm_eps)
+    return (x[:, 0] @ params["unembed"]).astype(jnp.float32), ncache
+
+
+def abstract_cache(cfg: ModelConfig, batch: int, seq_len: int) -> Tree:
+    d_inner, n_heads, conv_dim, _ = _dims(cfg)
+    n_p, every, tail = _periods(cfg)
+    nl = cfg.num_layers
+    c: Tree = {
+        "mamba": (
+            ParamSpec((nl, batch, conv_dim, CONV_WIDTH - 1),
+                      ("layers", "batch", "ssm_inner", None), cfg.dtype, "zeros"),
+            ParamSpec((nl, batch, n_heads, cfg.ssm_head_dim, cfg.ssm_state),
+                      ("layers", "batch", "ssm_heads", None, None), "float32", "zeros"),
+        )
+    }
+    if cfg.hybrid_attn_every and n_p:
+        kv, hd = cfg.resolved_kv_heads, cfg.resolved_head_dim
+        shape = (n_p, batch, kv, seq_len, hd)
+        logical = ("layers", "batch", "cache_kv_heads", "cache_seq", None)
+        cd = cfg.resolved_cache_dtype
+        c["attn"] = (ParamSpec(shape, logical, cd, "zeros"),
+                     ParamSpec(shape, logical, cd, "zeros"))
+    return c

@@ -1,0 +1,88 @@
+"""Parameter specs: every model declares an *abstract* parameter tree
+(shape + logical sharding axes + init), from which we derive
+  * materialized params (smoke tests / real runs),
+  * jax.ShapeDtypeStruct stand-ins (the multi-pod dry-run — no allocation),
+  * NamedShardings via repro.sharding.Partitioner.
+"""
+from __future__ import annotations
+
+import contextlib
+import contextvars
+from typing import Any, NamedTuple, Optional, Tuple
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+class ParamSpec(NamedTuple):
+    shape: Tuple[int, ...]
+    logical: Tuple[Optional[str], ...]
+    dtype: Any = "bfloat16"
+    init: str = "normal"   # normal | zeros | ones | small (0.006 normal)
+    scale: float = 1.0
+
+    def sds(self) -> jax.ShapeDtypeStruct:
+        return jax.ShapeDtypeStruct(self.shape, jnp.dtype(self.dtype))
+
+
+def is_spec(x) -> bool:
+    return isinstance(x, ParamSpec)
+
+
+def spec_map(fn, tree):
+    return jax.tree.map(fn, tree, is_leaf=is_spec)
+
+
+def abstract_tree(tree):
+    """ParamSpec tree -> ShapeDtypeStruct tree (dry-run stand-ins)."""
+    return spec_map(lambda s: s.sds(), tree)
+
+
+def materialize(spec: ParamSpec, key) -> jax.Array:
+    fan_in = spec.shape[0] if len(spec.shape) >= 2 else max(spec.shape[-1], 1)
+    if spec.init == "zeros":
+        return jnp.zeros(spec.shape, jnp.dtype(spec.dtype))
+    if spec.init == "ones":
+        return jnp.ones(spec.shape, jnp.dtype(spec.dtype))
+    if spec.init == "small":
+        std = 0.006 * spec.scale
+    else:
+        std = spec.scale / np.sqrt(max(fan_in, 1))
+    x = jax.random.normal(key, spec.shape, jnp.float32) * std
+    return x.astype(jnp.dtype(spec.dtype))
+
+
+def init_tree(key, tree):
+    leaves, treedef = jax.tree.flatten(tree, is_leaf=is_spec)
+    keys = jax.random.split(key, len(leaves))
+    return jax.tree.unflatten(treedef, [materialize(s, k) for s, k in zip(leaves, keys)])
+
+
+def count(tree) -> int:
+    return sum(int(np.prod(s.shape)) for s in jax.tree.leaves(tree, is_leaf=is_spec))
+
+
+# --- ambient partitioner: models call constrain() without threading a mesh ---
+_AMBIENT: contextvars.ContextVar = contextvars.ContextVar("partitioner", default=None)
+
+
+@contextlib.contextmanager
+def use_partitioner(p):
+    tok = _AMBIENT.set(p)
+    try:
+        yield p
+    finally:
+        _AMBIENT.reset(tok)
+
+
+def current_partitioner():
+    return _AMBIENT.get()
+
+
+def constrain(x: jax.Array, *logical: Optional[str]) -> jax.Array:
+    """Sharding constraint via logical axis names; no-op without a partitioner."""
+    p = _AMBIENT.get()
+    if p is None:
+        return x
+    return jax.lax.with_sharding_constraint(x, p.sharding(x.shape, logical))

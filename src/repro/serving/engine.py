@@ -1,0 +1,93 @@
+"""Model-level serving engine: batched prefill -> decode generation loop
+for any assigned architecture (the per-stage compute a TaskWorker runs when
+a workflow stage is an LM rather than a diffusion model).
+
+The engine is deliberately synchronous-batch (the paper's Collaboration
+Mode): one jitted prefill + one jitted decode step, decode iterated from a
+preallocated max-length cache.
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Any, Dict, List, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.models.param import is_spec
+
+
+@dataclasses.dataclass
+class GenerationResult:
+    tokens: np.ndarray          # [B, prompt + generated]
+    prompt_len: int
+    steps: int
+
+
+class ServingEngine:
+    def __init__(self, cfg: ModelConfig, params=None, *, max_len: int = 256,
+                 seed: int = 0):
+        self.cfg = cfg
+        self.max_len = max_len
+        self.params = params if params is not None else registry.init_params(
+            jax.random.PRNGKey(seed), cfg)
+
+        cfgs = cfg
+
+        @jax.jit
+        def prefill_fn(params, batch):
+            return registry.prefill(params, batch, cfgs, dropless=True)
+
+        @jax.jit
+        def decode_fn(params, cache, tokens, cur_index):
+            return registry.decode_step(
+                params, cache, {"tokens": tokens, "cur_index": cur_index},
+                cfgs, dropless=True)
+
+        self._prefill = prefill_fn
+        self._decode = decode_fn
+
+    def _fresh_cache(self, batch: int):
+        spec = registry.abstract_cache(self.cfg, batch, self.max_len)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+                             spec, is_leaf=is_spec)
+        if self.cfg.family == "audio":
+            from repro.models.encdec import make_decode_cache
+
+            frames = jnp.zeros(
+                (batch, self.cfg.frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+            cache = make_decode_cache(self.params, frames, self.cfg, self.max_len)
+        return cache
+
+    def generate(self, prompts: np.ndarray, *, steps: int = 16,
+                 temperature: float = 0.0, seed: int = 0) -> GenerationResult:
+        """prompts: [B, P] int32; teacher-forces the prompt through the
+        decode path (uniform across families incl. recurrent), then samples
+        ``steps`` new tokens greedily (or with temperature)."""
+        b, p = prompts.shape
+        assert p + steps <= self.max_len
+        cache = self._fresh_cache(b)
+        rng = jax.random.PRNGKey(seed)
+
+        logits = None
+        for t in range(p):
+            logits, cache = self._decode(self.params, cache,
+                                         jnp.asarray(prompts[:, t]), jnp.int32(t))
+        out = [prompts]
+        cur = None
+        for i in range(steps):
+            if temperature > 0:
+                rng, k = jax.random.split(rng)
+                cur = jax.random.categorical(k, logits / temperature, axis=-1)
+            else:
+                cur = jnp.argmax(logits, axis=-1)
+            cur = jnp.minimum(cur, self.cfg.vocab_size - 1).astype(jnp.int32)
+            out.append(np.asarray(cur)[:, None])
+            logits, cache = self._decode(self.params, cache, cur,
+                                         jnp.int32(p + i))
+        return GenerationResult(tokens=np.concatenate(out, axis=1),
+                                prompt_len=p, steps=steps)

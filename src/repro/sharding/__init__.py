@@ -1,0 +1,7 @@
+from repro.sharding.partition import (
+    DEFAULT_RULES,
+    Partitioner,
+    partition_spec,
+)
+
+__all__ = ["DEFAULT_RULES", "Partitioner", "partition_spec"]

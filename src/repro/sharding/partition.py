@@ -1,0 +1,124 @@
+"""Logical-axis sharding rules (MaxText-style) with divisibility guards.
+
+Models annotate every parameter / activation dimension with a *logical* axis
+name; a rule table maps logical names to mesh axes.  A dimension is sharded
+on a mesh axis only when (a) the axis exists in the mesh, (b) the dim size is
+divisible by the axis size, and (c) the axis is not already used by another
+dimension of the same array.  Everything else is replicated — this is what
+makes one rule table work across all 10 assigned architectures (kv_heads=2
+simply replicates over the 16-way model axis instead of failing).
+"""
+from __future__ import annotations
+
+import math
+from typing import Dict, Mapping, Optional, Sequence, Tuple, Union
+
+import jax
+from jax.sharding import Mesh, NamedSharding, PartitionSpec as P
+
+AxisRule = Union[None, str, Tuple[str, ...]]
+
+# Canonical rules shared by train + serve paths. See DESIGN.md §5.
+DEFAULT_RULES: Dict[str, AxisRule] = {
+    # activations
+    "batch": ("pod", "data"),
+    "seq": None,
+    "seq_res": None,          # residual-stream seq dim; "model" = Megatron-SP
+    "act_embed": None,        # activation d_model stays replicated over model
+    "act_heads": "model",
+    "act_mlp": "model",
+    "act_vocab": "model",
+    "expert_cap": "data",     # MoE dispatch-buffer capacity dim
+    "cache_seq": None,        # long_500k overrides this to "data" (context par.)
+    "cache_kv_heads": "model",
+    # params: 2D sharding — FSDP over `data`, tensor over `model`
+    "embed": "data",          # param d_model dim
+    "vocab": "model",
+    "heads": "model",
+    "kv_heads": "model",
+    "head_dim": None,
+    "mlp": "model",           # param d_ff dim
+    "experts": "model",       # expert-parallel when divisible
+    "expert_mlp": None,       # per-expert ff dim (fallback shard target)
+    "layers": None,           # stacked-layer leading dim
+    "ssm_inner": "model",
+    "ssm_state": None,
+    "ssm_heads": "model",
+    "conv": None,
+    "frames": None,
+    "stats": None,            # scalar-ish optimizer stats
+}
+
+
+def _axes_of(rule: AxisRule) -> Tuple[str, ...]:
+    if rule is None:
+        return ()
+    if isinstance(rule, str):
+        return (rule,)
+    return tuple(rule)
+
+
+def partition_spec(
+    shape: Sequence[int],
+    logical: Sequence[Optional[str]],
+    mesh: Mesh,
+    rules: Optional[Mapping[str, AxisRule]] = None,
+) -> P:
+    """Map logical dim names -> PartitionSpec with divisibility guards."""
+    rules = dict(DEFAULT_RULES, **(rules or {}))
+    if len(shape) != len(logical):
+        raise ValueError(f"shape {shape} vs logical {logical} rank mismatch")
+    mesh_sizes = dict(zip(mesh.axis_names, mesh.devices.shape))
+    used: set = set()
+    out = []
+    for dim, name in zip(shape, logical):
+        rule = rules.get(name) if name else None
+        chosen = []
+        for ax in _axes_of(rule):
+            if ax not in mesh_sizes or ax in used:
+                continue
+            size = math.prod([mesh_sizes[a] for a in chosen]) * mesh_sizes[ax]
+            if dim % size != 0:
+                continue
+            chosen.append(ax)
+        for ax in chosen:
+            used.add(ax)
+        if not chosen:
+            out.append(None)
+        elif len(chosen) == 1:
+            out.append(chosen[0])
+        else:
+            out.append(tuple(chosen))
+    # strip trailing Nones (cosmetic)
+    while out and out[-1] is None:
+        out.pop()
+    return P(*out)
+
+
+class Partitioner:
+    """Holds a mesh + rule overrides; maps ParamSpec/ShapeDtype trees."""
+
+    def __init__(self, mesh: Mesh, rules: Optional[Mapping[str, AxisRule]] = None):
+        self.mesh = mesh
+        self.rules = dict(DEFAULT_RULES, **(rules or {}))
+
+    def spec(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> P:
+        return partition_spec(shape, logical, self.mesh, self.rules)
+
+    def sharding(self, shape: Sequence[int], logical: Sequence[Optional[str]]) -> NamedSharding:
+        return NamedSharding(self.mesh, self.spec(shape, logical))
+
+    def tree_specs(self, abstract_tree):
+        """abstract_tree: pytree of objects with .shape and .logical."""
+        return jax.tree.map(
+            lambda ps: self.spec(ps.shape, ps.logical),
+            abstract_tree,
+            is_leaf=lambda x: hasattr(x, "logical"),
+        )
+
+    def tree_shardings(self, abstract_tree):
+        return jax.tree.map(
+            lambda ps: self.sharding(ps.shape, ps.logical),
+            abstract_tree,
+            is_leaf=lambda x: hasattr(x, "logical"),
+        )

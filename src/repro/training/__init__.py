@@ -1,0 +1,4 @@
+from repro.training.optimizer import AdamWState, adamw_init, adamw_update
+from repro.training.train_step import make_train_step
+
+__all__ = ["AdamWState", "adamw_init", "adamw_update", "make_train_step"]

@@ -1,0 +1,47 @@
+"""Minimal checkpointing: flat-key npz of params + optimizer state."""
+from __future__ import annotations
+
+import pathlib
+from typing import Any, Dict, Tuple
+
+import jax
+import numpy as np
+
+
+def _flatten(tree) -> Dict[str, np.ndarray]:
+    flat = {}
+    for path, leaf in jax.tree_util.tree_flatten_with_path(tree)[0]:
+        key = "/".join(str(getattr(p, "key", getattr(p, "idx", p))) for p in path)
+        flat[key] = np.asarray(leaf)
+    return flat
+
+
+def save_checkpoint(path: str, params, opt_state=None, step: int = 0) -> None:
+    p = pathlib.Path(path)
+    p.parent.mkdir(parents=True, exist_ok=True)
+    blobs = {"__step__": np.asarray(step)}
+    for k, v in _flatten(params).items():
+        blobs[f"p/{k}"] = v
+    if opt_state is not None:
+        for k, v in _flatten(opt_state).items():
+            blobs[f"o/{k}"] = v
+    np.savez(p, **blobs)
+
+
+def load_checkpoint(path: str, params_template, opt_template=None):
+    """Restores into the given pytree templates; returns (params, opt, step)."""
+    z = np.load(path, allow_pickle=False)
+    step = int(z["__step__"])
+
+    def restore(template, prefix):
+        keys = []
+        for pth, _ in jax.tree_util.tree_flatten_with_path(template)[0]:
+            keys.append("/".join(str(getattr(p, "key", getattr(p, "idx", p)))
+                                 for p in pth))
+        leaves = [z[f"{prefix}/{k}"] for k in keys]
+        treedef = jax.tree_util.tree_structure(template)
+        return jax.tree_util.tree_unflatten(treedef, leaves)
+
+    params = restore(params_template, "p")
+    opt = restore(opt_template, "o") if opt_template is not None else None
+    return params, opt, step

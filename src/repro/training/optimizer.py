@@ -1,0 +1,78 @@
+"""AdamW with decoupled weight decay + global-norm clipping (hand-rolled:
+optax is not available in this environment).  Moments are f32 and follow the
+parameter sharding (ZeRO-style: FSDP-sharded params => FSDP-sharded moments).
+"""
+from __future__ import annotations
+
+from typing import Any, NamedTuple
+
+import jax
+import jax.numpy as jnp
+
+
+class AdamWState(NamedTuple):
+    step: jax.Array
+    mu: Any
+    nu: Any
+
+
+def adamw_init(params) -> AdamWState:
+    zeros = jax.tree.map(lambda p: jnp.zeros(p.shape, jnp.float32), params)
+    return AdamWState(step=jnp.zeros((), jnp.int32), mu=zeros,
+                      nu=jax.tree.map(jnp.copy, zeros))
+
+
+def adamw_abstract(param_specs):
+    """ParamSpec tree -> ParamSpec tree for (mu, nu) — dry-run stand-ins."""
+    from repro.models.param import ParamSpec, spec_map
+
+    f32 = spec_map(lambda s: ParamSpec(s.shape, s.logical, "float32", "zeros"),
+                   param_specs)
+    return AdamWState(
+        step=ParamSpec((), (), "int32", "zeros"),
+        mu=f32,
+        nu=jax.tree.map(lambda s: s, f32, is_leaf=lambda x: hasattr(x, "logical")),
+    )
+
+
+def global_norm(tree) -> jax.Array:
+    return jnp.sqrt(sum(jnp.sum(jnp.square(g.astype(jnp.float32)))
+                        for g in jax.tree.leaves(tree)))
+
+
+def adamw_update(
+    grads,
+    state: AdamWState,
+    params,
+    *,
+    lr: float = 3e-4,
+    b1: float = 0.9,
+    b2: float = 0.95,
+    eps: float = 1e-8,
+    weight_decay: float = 0.1,
+    clip_norm: float = 1.0,
+):
+    step = state.step + 1
+    gnorm = global_norm(grads)
+    scale = jnp.minimum(1.0, clip_norm / jnp.maximum(gnorm, 1e-9))
+    bc1 = 1.0 - b1 ** step.astype(jnp.float32)
+    bc2 = 1.0 - b2 ** step.astype(jnp.float32)
+
+    def upd(g, m, v, p):
+        g = g.astype(jnp.float32) * scale
+        m2 = b1 * m + (1 - b1) * g
+        v2 = b2 * v + (1 - b2) * g * g
+        mh = m2 / bc1
+        vh = v2 / bc2
+        delta = mh / (jnp.sqrt(vh) + eps) + weight_decay * p.astype(jnp.float32)
+        return (p.astype(jnp.float32) - lr * delta).astype(p.dtype), m2, v2
+
+    g_leaves, treedef = jax.tree.flatten(grads)
+    m_leaves = treedef.flatten_up_to(state.mu)
+    v_leaves = treedef.flatten_up_to(state.nu)
+    p_leaves = treedef.flatten_up_to(params)
+    triples = [upd(g, m, v, p) for g, m, v, p in zip(g_leaves, m_leaves, v_leaves, p_leaves)]
+    new_params = jax.tree.unflatten(treedef, [t[0] for t in triples])
+    new_mu = jax.tree.unflatten(treedef, [t[1] for t in triples])
+    new_nu = jax.tree.unflatten(treedef, [t[2] for t in triples])
+    return new_params, AdamWState(step=step, mu=new_mu, nu=new_nu), gnorm

@@ -1,0 +1,63 @@
+"""Train step factory: loss + grad + AdamW, uniform over all families."""
+from __future__ import annotations
+
+import functools
+from typing import Any, Dict
+
+import jax
+import jax.numpy as jnp
+
+from repro.configs.base import ModelConfig
+from repro.models import registry
+from repro.training.optimizer import AdamWState, adamw_update
+
+
+def make_train_step(cfg: ModelConfig, *, lr: float = 3e-4, weight_decay: float = 0.1,
+                    dropless: bool = False, microbatches: int = 1):
+    """Returns train_step(params, opt_state, batch) -> (params, opt, metrics).
+
+    ``microbatches > 1`` splits the global batch and accumulates f32 grads
+    over a scan — the standard lever for fitting large-model activations
+    (the accumulator costs one f32 copy of the params, which is already paid
+    by the AdamW moments' sharding).
+    """
+
+    def loss(params, batch):
+        l, metrics = registry.loss_fn(params, batch, cfg, dropless=dropless)
+        return l, metrics
+
+    def grads_of(params, batch):
+        return jax.value_and_grad(loss, has_aux=True)(params, batch)
+
+    def train_step(params, opt_state: AdamWState, batch: Dict[str, Any]):
+        if microbatches == 1:
+            (l, metrics), grads = grads_of(params, batch)
+        else:
+            def split(x):
+                b = x.shape[0]
+                assert b % microbatches == 0, (b, microbatches)
+                return x.reshape((microbatches, b // microbatches) + x.shape[1:])
+
+            mb = {k: split(v) for k, v in batch.items() if hasattr(v, "shape") and v.ndim}
+            scalars = {k: v for k, v in batch.items() if k not in mb}
+
+            def body(acc, xs):
+                (l, metrics), g = grads_of(params, dict(xs, **scalars))
+                acc_g, acc_l = acc
+                acc_g = jax.tree.map(
+                    lambda a, b_: a + b_.astype(jnp.float32), acc_g, g)
+                return (acc_g, acc_l + l), metrics
+
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params)
+            (gsum, lsum), metrics_stack = jax.lax.scan(body, (zero, 0.0), mb)
+            grads = jax.tree.map(lambda g: g / microbatches, gsum)
+            l = lsum / microbatches
+            metrics = jax.tree.map(lambda m: m[-1], metrics_stack)
+        params, opt_state, gnorm = adamw_update(
+            grads, opt_state, params, lr=lr, weight_decay=weight_decay
+        )
+        metrics = dict(metrics, loss=l, grad_norm=gnorm)
+        return params, opt_state, metrics
+
+    return train_step

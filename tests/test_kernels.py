@@ -1,0 +1,220 @@
+"""Pallas kernel validation: shape/dtype sweeps against the pure-jnp oracles
+(interpret=True executes the kernel body in Python on CPU).
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.kernels.decode_attention import decode_attention
+from repro.kernels.decode_attention.ref import decode_attention_ref
+from repro.kernels.flash_attention import flash_attention
+from repro.kernels.flash_attention.ref import attention_ref
+from repro.kernels.rwkv6_wkv import wkv6
+from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def rand(key, shape, dtype):
+    x = jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+    return x.astype(dtype)
+
+
+TOLS = {jnp.float32: dict(atol=2e-5, rtol=2e-5),
+        jnp.bfloat16: dict(atol=3e-2, rtol=3e-2)}
+
+
+# ----------------------------------------------------------- flash attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kv,d,bq,bk", [
+    (128, 2, 2, 64, 64, 64),
+    (256, 4, 2, 64, 128, 128),
+    (512, 2, 1, 128, 128, 256),
+    (384, 3, 3, 32, 128, 128),   # uneven heads, non-square blocks
+])
+def test_flash_attention_sweep(dtype, s, h, kv, d, bq, bk):
+    if s % bq or s % bk:
+        pytest.skip("block mismatch")
+    b = 2
+    q = rand(0, (b, s, h, d), dtype)
+    k = rand(1, (b, s, kv, d), dtype)
+    v = rand(2, (b, s, kv, d), dtype)
+    out = flash_attention(q, k, v, causal=True, block_q=bq, block_k=bk)
+    rep = h // kv
+    ref = attention_ref(q, jnp.repeat(k, rep, 2), jnp.repeat(v, rep, 2), causal=True)
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_flash_attention_non_causal():
+    b, s, h, d = 1, 256, 2, 64
+    q, k, v = (rand(i, (b, s, h, d), jnp.float32) for i in range(3))
+    out = flash_attention(q, k, v, causal=False)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_matches_model_layer():
+    """Kernel agrees with the model's blockwise attention path."""
+    from repro.models.layers import attention_blockwise
+
+    b, s, h, kvh, d = 2, 256, 4, 2, 64
+    q = rand(3, (b, s, h, d), jnp.float32)
+    k = rand(4, (b, s, kvh, d), jnp.float32)
+    v = rand(5, (b, s, kvh, d), jnp.float32)
+    ker = flash_attention(q, k, v, causal=True)
+    mod = attention_blockwise(q, k, v, causal=True, q_block=64, kv_block=64)
+    np.testing.assert_allclose(np.asarray(ker), np.asarray(mod), atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------------------------------------------- wkv6
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("t,h,kk,bt", [
+    (64, 2, 32, 16),
+    (128, 4, 64, 64),
+    (96, 1, 64, 32),
+])
+def test_wkv6_sweep(dtype, t, h, kk, bt):
+    b = 2
+    r = rand(0, (b, t, h, kk), dtype)
+    k = rand(1, (b, t, h, kk), dtype) * 0.3
+    v = rand(2, (b, t, h, kk), dtype)
+    w = jax.nn.sigmoid(rand(3, (b, t, h, kk), jnp.float32)) * 0.5 + 0.45
+    w = w.astype(dtype)
+    u = rand(4, (h, kk), dtype) * 0.1
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    y, s = wkv6(r, k, v, w, u, s0, block_t=bt)
+    yr, sr = wkv6_ref(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y, np.float32),
+                               np.asarray(yr, np.float32),
+                               **TOLS[dtype])
+    np.testing.assert_allclose(np.asarray(s), np.asarray(sr),
+                               atol=5e-2 if dtype == jnp.bfloat16 else 1e-4,
+                               rtol=5e-2 if dtype == jnp.bfloat16 else 1e-4)
+
+
+def test_wkv6_nonzero_initial_state_continuation():
+    """Chunked calls with carried state == one full call (serving path)."""
+    b, t, h, kk = 1, 64, 2, 32
+    r, k, v = (rand(i, (b, t, h, kk), jnp.float32) for i in range(3))
+    w = (jax.nn.sigmoid(rand(3, (b, t, h, kk), jnp.float32)) * 0.5 + 0.45)
+    u = rand(4, (h, kk), jnp.float32) * 0.1
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    y_full, s_full = wkv6(r, k, v, w, u, s0, block_t=32)
+    y1, s1 = wkv6(r[:, :32], k[:, :32], v[:, :32], w[:, :32], u, s0, block_t=32)
+    y2, s2 = wkv6(r[:, 32:], k[:, 32:], v[:, 32:], w[:, 32:], u, s1, block_t=32)
+    np.testing.assert_allclose(np.asarray(jnp.concatenate([y1, y2], 1)),
+                               np.asarray(y_full), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s2), np.asarray(s_full), atol=1e-4, rtol=1e-4)
+
+
+def test_wkv6_matches_model_scan():
+    from repro.models.rwkv6 import wkv6_scan
+
+    b, t, h, kk = 2, 32, 2, 32
+    r, k, v = (rand(i, (b, t, h, kk), jnp.float32) for i in range(3))
+    w = (jax.nn.sigmoid(rand(9, (b, t, h, kk), jnp.float32)) * 0.5 + 0.45)
+    u = rand(4, (h, kk), jnp.float32) * 0.1
+    s0 = jnp.zeros((b, h, kk, kk), jnp.float32)
+    y_k, s_k = wkv6(r, k, v, w, u, s0, block_t=16)
+    y_m, s_m = wkv6_scan(r, k, v, w, u, s0)
+    np.testing.assert_allclose(np.asarray(y_k), np.asarray(y_m), atol=1e-4, rtol=1e-4)
+    np.testing.assert_allclose(np.asarray(s_k), np.asarray(s_m), atol=1e-4, rtol=1e-4)
+
+
+# ------------------------------------------------------------ decode attention
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+@pytest.mark.parametrize("s,h,kv,d,bk,cur", [
+    (512, 4, 2, 64, 128, 511),
+    (512, 4, 2, 64, 128, 100),   # partially filled cache
+    (1024, 8, 8, 128, 256, 700),
+    (256, 2, 1, 32, 64, 0),      # single valid position
+])
+def test_decode_attention_sweep(dtype, s, h, kv, d, bk, cur):
+    b = 2
+    q = rand(0, (b, h, d), dtype)
+    kc = rand(1, (b, s, kv, d), dtype)
+    vc = rand(2, (b, s, kv, d), dtype)
+    out = decode_attention(q, kc, vc, jnp.int32(cur), block_k=bk)
+    ref = decode_attention_ref(q, kc, vc, jnp.int32(cur))
+    np.testing.assert_allclose(np.asarray(out, np.float32),
+                               np.asarray(ref, np.float32), **TOLS[dtype])
+
+
+def test_decode_attention_matches_model_layer():
+    from repro.models.layers import attention_decode
+
+    b, s, h, kv, d = 2, 256, 4, 2, 64
+    q = rand(0, (b, h, d), jnp.float32)
+    kc = rand(1, (b, s, kv, d), jnp.float32)
+    vc = rand(2, (b, s, kv, d), jnp.float32)
+    out = decode_attention(q, kc, vc, jnp.int32(77))
+    # the model stores the cache in the [B,KV,S,hd] serving layout
+    mod = attention_decode(q, kc.transpose(0, 2, 1, 3), vc.transpose(0, 2, 1, 3),
+                           jnp.int32(77))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(mod), atol=3e-5, rtol=3e-5)
+
+
+# ------------------------------------------------- int8 quantized cache
+@pytest.mark.parametrize("s,h,kv,d,cur", [
+    (512, 4, 2, 64, 511),
+    (256, 8, 8, 128, 100),
+])
+def test_decode_attention_int8_matches_dequantized_oracle(s, h, kv, d, cur):
+    from repro.kernels.decode_attention.ops import (
+        decode_attention_quantized, quantize_kv)
+
+    b = 2
+    q = rand(0, (b, h, d), jnp.float32)
+    kc = rand(1, (b, s, kv, d), jnp.float32)
+    vc = rand(2, (b, s, kv, d), jnp.float32)
+    k_q, k_s = quantize_kv(kc)
+    v_q, v_s = quantize_kv(vc)
+    out = decode_attention_quantized(q, k_q, v_q, k_s, v_s, jnp.int32(cur))
+    # oracle on the dequantized cache: must match tightly
+    deq_k = k_q.astype(jnp.float32) * k_s.transpose(0, 2, 1)[..., None]
+    deq_v = v_q.astype(jnp.float32) * v_s.transpose(0, 2, 1)[..., None]
+    ref = decode_attention_ref(q, deq_k, deq_v, jnp.int32(cur))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref), atol=1e-4, rtol=1e-4)
+    # and the quantization error vs full precision stays small
+    full = decode_attention_ref(q, kc, vc, jnp.int32(cur))
+    err = float(jnp.abs(out - full).max())
+    assert err < 0.05, err
+
+
+def test_quantize_kv_roundtrip_error_bounded():
+    from repro.kernels.decode_attention.ops import quantize_kv
+
+    x = rand(3, (2, 64, 4, 32), jnp.float32) * 3.0
+    q, s = quantize_kv(x)
+    deq = q.astype(jnp.float32) * s.transpose(0, 2, 1)[..., None]
+    rel = float(jnp.max(jnp.abs(deq - x)) / jnp.max(jnp.abs(x)))
+    assert rel < 1.0 / 64  # absmax int8: error <= scale/2 ~ absmax/254
+
+
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=10, deadline=None)
+    @given(
+        s=st.sampled_from([128, 256]),
+        h=st.sampled_from([1, 2, 4]),
+        d=st.sampled_from([32, 64]),
+        cur=st.integers(0, 127),
+    )
+    def test_property_decode_attention_any_index(s, h, d, cur):
+        b = 1
+        q = rand(0, (b, h, d), jnp.float32)
+        kc = rand(1, (b, s, h, d), jnp.float32)
+        vc = rand(2, (b, s, h, d), jnp.float32)
+        out = decode_attention(q, kc, vc, jnp.int32(cur), block_k=64)
+        ref = decode_attention_ref(q, kc, vc, jnp.int32(cur))
+        np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                                   atol=3e-5, rtol=3e-5)

@@ -1,0 +1,334 @@
+"""Double-ring buffer tests: basic ops, the paper's liveness Cases 1-8,
+lock-timeout takeover, Theorem-2 traversal, and hypothesis property tests.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.core import CORRUPT, DoubleRingBuffer, RdmaFabric, RingProducer
+from repro.core.ring_buffer import BUSY_BIT, OFF_LOCK, _advance
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def make_rb(n_slots=32, buf_size=2048, name="rb"):
+    fab = RdmaFabric()
+    rb = DoubleRingBuffer(fab, name, n_slots=n_slots, buf_size=buf_size)
+    return fab, rb
+
+
+# --------------------------------------------------------------------- basic
+def test_fifo_roundtrip_variable_sizes():
+    _, rb = make_rb()
+    p = RingProducer(rb, 1)
+    msgs = [bytes([i % 256]) * (1 + (i * 131) % 400) for i in range(20)]
+    for m in msgs:
+        assert p.append(m)
+        got = rb.poll()
+        assert got == m
+
+
+def test_wraparound_entry_never_straddles():
+    _, rb = make_rb(n_slots=64, buf_size=512)
+    p = RingProducer(rb, 1)
+    out = []
+    msgs = [bytes([i]) * 100 for i in range(30)]
+    for m in msgs:
+        while not p.append(m):
+            got = rb.poll()
+            assert got is not None
+            out.append(got)
+    out.extend(rb.drain())
+    assert out == msgs
+
+
+def test_full_ring_aborts_and_recovers():
+    _, rb = make_rb(n_slots=4, buf_size=256)
+    p = RingProducer(rb, 1)
+    assert p.append(b"a" * 50)
+    assert p.append(b"b" * 50)
+    assert p.append(b"c" * 50)
+    assert not p.append(b"d" * 200)  # no space
+    assert rb.stats.aborts_full == 1
+    assert rb.poll() == b"a" * 50
+    assert p.append(b"e" * 50)
+    assert rb.drain() == [b"b" * 50, b"c" * 50, b"e" * 50]
+
+
+def test_empty_poll_returns_none():
+    _, rb = make_rb()
+    assert rb.poll() is None
+
+
+def test_advance_wrap_rule():
+    # fits exactly
+    assert _advance(0, 100, 100) == (0, 100)
+    # would straddle: skip the tail fragment
+    pos, new = _advance(90, 20, 100)
+    assert pos == 0 and new == 90 + 10 + 20
+
+
+# ------------------------------------------------------- multi-producer races
+def test_two_producers_interleaved_steps_lock_excludes():
+    """Without a timeout, the CAS lock serializes producers completely."""
+    _, rb = make_rb()
+    p1 = RingProducer(rb, 1, lock_timeout_s=10.0)
+    p2 = RingProducer(rb, 2, lock_timeout_s=10.0)
+    a = p1.start_append(b"X" * 40)
+    assert a.step() == "lock"
+    # p2 cannot acquire while p1 holds: drive p2's acquire in a thread briefly
+    b = p2.start_append(b"Y" * 40)
+    done = threading.Event()
+
+    def run_b():
+        b.run()
+        done.set()
+
+    t = threading.Thread(target=run_b, daemon=True)
+    t.start()
+    assert not done.wait(0.05)  # blocked on the lock
+    a.run()  # p1 finishes and releases
+    assert done.wait(1.0)
+    assert rb.drain() == [b"X" * 40, b"Y" * 40]
+
+
+def test_threaded_producers_all_messages_arrive():
+    fab, rb = make_rb(n_slots=128, buf_size=1 << 16)
+    N_PRODUCERS, N_MSGS = 4, 50
+    sent = {}
+    errors = []
+
+    def producer(pid):
+        p = RingProducer(rb, pid, lock_timeout_s=0.5)
+        for i in range(N_MSGS):
+            m = bytes(f"p{pid}-m{i}-".encode()) + bytes([pid]) * (i % 97)
+            sent[(pid, i)] = m
+            for _ in range(10000):
+                if p.append(m):
+                    break
+            else:
+                errors.append((pid, i))
+
+    threads = [threading.Thread(target=producer, args=(pid,)) for pid in range(1, N_PRODUCERS + 1)]
+    got = []
+    for t in threads:
+        t.start()
+    while any(t.is_alive() for t in threads) or True:
+        item = rb.poll()
+        if item is not None:
+            if not isinstance(item, type(CORRUPT)):
+                got.append(item)
+        elif not any(t.is_alive() for t in threads):
+            break
+    for t in threads:
+        t.join()
+    assert not errors
+    assert sorted(got) == sorted(sent.values())
+    # per-producer FIFO: commit order within a producer is its send order
+    for pid in range(1, N_PRODUCERS + 1):
+        mine = [g for g in got if g.startswith(f"p{pid}-".encode())]
+        assert mine == [sent[(pid, i)] for i in range(N_MSGS)]
+
+
+# ----------------------------------------------------------- liveness cases
+def crash_after(op, steps):
+    """Drive an AppendOp through the named steps, then abandon it (crash)."""
+    for s in steps:
+        got = op.step()
+        assert got == s, (got, s)
+
+
+def test_case1_lost_before_gh_takeover():
+    """Lock(X) -> TL -> Lock(Y) -> ... -> Z reads valid data from Y."""
+    _, rb = make_rb()
+    x = RingProducer(rb, 1, lock_timeout_s=0.01)
+    y = RingProducer(rb, 2, lock_timeout_s=0.01)
+    op_x = x.start_append(b"XXX")
+    crash_after(op_x, ["lock"])  # X dies holding the lock
+    assert y.append(b"YYY")  # acquires via timeout takeover
+    assert rb.stats.lock_takeovers == 1
+    assert rb.poll() == b"YYY"
+
+
+def test_case7_lost_after_wl_header_recovery():
+    """X writes data+size then dies before UH; Y detects the busy slot,
+    advances the header first, and writes after it. Z reads both."""
+    _, rb = make_rb()
+    x = RingProducer(rb, 1, lock_timeout_s=0.01)
+    y = RingProducer(rb, 2, lock_timeout_s=0.01)
+    op_x = x.start_append(b"XDATA")
+    crash_after(op_x, ["lock", "gh", "wb", "wl"])  # died before UH
+    assert y.append(b"YDATA")
+    assert rb.stats.case7_recoveries == 1
+    assert rb.poll() == b"XDATA"
+    assert rb.poll() == b"YDATA"
+
+
+def test_case8_lost_after_uh():
+    """X updates the header but never unlocks; Z reads X's data, Y takes over."""
+    _, rb = make_rb()
+    x = RingProducer(rb, 1, lock_timeout_s=0.01)
+    y = RingProducer(rb, 2, lock_timeout_s=0.01)
+    op_x = x.start_append(b"XDATA")
+    crash_after(op_x, ["lock", "gh", "wb", "wl", "uh"])
+    assert rb.poll() == b"XDATA"  # consumer never blocked
+    assert y.append(b"YDATA")
+    assert rb.stats.lock_takeovers == 1
+    assert rb.poll() == b"YDATA"
+
+
+def _delayed_writer_setup():
+    """Common prefix of Cases 2-6: X does Lock+GH then stalls; Y takes over."""
+    _, rb = make_rb()
+    x = RingProducer(rb, 1, lock_timeout_s=0.005)
+    y = RingProducer(rb, 2, lock_timeout_s=0.005)
+    op_x = x.start_append(b"X" * 32)
+    crash_after(op_x, ["lock", "gh"])  # X read the header, then stalled (TL)
+    op_y = y.start_append(b"Y" * 32)
+    crash_after(op_y, ["lock"])  # takeover
+    assert rb.stats.lock_takeovers == 1
+    return rb, op_x, op_y
+
+
+def test_case2_delayed_x_overwrites_after_y_done_same_size():
+    """...WB(Y) WL(Y) UH(Y) Unlock(Y) WB(X) WL(X): WL(X) fails on busy bit;
+    X's data overwrote Y's buffer bytes. Sizes match -> payload is X's valid
+    bytes (consumer can't tell; checksum passes because X wrote a complete
+    valid entry of the same size). Either way Z proceeds."""
+    rb, op_x, op_y = _delayed_writer_setup()
+    crash_after(op_y, ["gh", "wb", "wl", "uh", "unlock"])  # Y completes
+    crash_after(op_x, ["wb"])  # delayed X overwrites Y's entry
+    assert op_x.step() == "wl" and op_x.state == "abort_cas"  # busy bit -> CAS fails
+    got = rb.poll()
+    assert got == b"X" * 32  # X's complete same-size entry is self-consistent
+    assert rb.poll() is None  # queue consistent afterwards
+
+
+def test_case2b_delayed_x_different_size_corrupts_one_entry():
+    """Same interleaving but X's entry is smaller than Y's: the checksum
+    catches the mangled entry; Z discards it and proceeds (liveness)."""
+    _, rb = make_rb()
+    x = RingProducer(rb, 1, lock_timeout_s=0.005)
+    y = RingProducer(rb, 2, lock_timeout_s=0.005)
+    op_x = x.start_append(b"x" * 5)  # different size than Y's
+    crash_after(op_x, ["lock", "gh"])
+    op_y = y.start_append(b"Y" * 64)
+    crash_after(op_y, ["lock", "gh", "wb", "wl", "uh", "unlock"])
+    crash_after(op_x, ["wb"])  # clobbers the head of Y's entry
+    assert op_x.step() == "wl" and op_x.state == "abort_cas"
+    got = rb.poll()
+    assert isinstance(got, type(CORRUPT))  # discarded, not delivered
+    assert rb.stats.corrupt == 1
+    # liveness: subsequent appends are read fine
+    assert y.append(b"AFTER")
+    assert rb.poll() == b"AFTER"
+
+
+def test_case4_delayed_x_finalizes_before_y():
+    """WB(Y) WB(X) WL(X) WL(Y): X's CAS wins, Y loses and aborts; Z reads X."""
+    rb, op_x, op_y = _delayed_writer_setup()
+    crash_after(op_y, ["gh", "wb"])  # Y wrote its buffer bytes
+    crash_after(op_x, ["wb", "wl"])  # X overwrites and claims the slot first
+    assert op_x.state == "uh"
+    assert op_y.step() == "wl" and op_y.state == "abort_cas"  # WL(Y) fails
+    crash_after(op_x, ["uh", "unlock"])
+    assert rb.poll() == b"X" * 32
+    assert rb.poll() is None
+
+
+def test_case5_x_writes_before_y_y_finalizes():
+    """WB(X) WB(Y) WL(Y) WL(X): Y overwrites X and finalizes; Z reads Y."""
+    rb, op_x, op_y = _delayed_writer_setup()
+    crash_after(op_x, ["wb"])  # X writes first
+    crash_after(op_y, ["gh", "wb", "wl"])  # Y overwrites, wins the slot CAS
+    assert op_x.step() == "wl" and op_x.state == "abort_cas"
+    crash_after(op_y, ["uh", "unlock"])
+    assert rb.poll() == b"Y" * 32
+    assert rb.poll() is None
+
+
+def test_case6_x_claims_slot_y_overwrote_buffer():
+    """WB(X) WB(Y) WL(X) WL(Y): X claims the slot but Y's bytes are in the
+    buffer. Same-size entries -> Y's complete entry is read; otherwise the
+    checksum discards. Z proceeds either way."""
+    rb, op_x, op_y = _delayed_writer_setup()
+    crash_after(op_x, ["wb"])
+    crash_after(op_y, ["gh", "wb"])  # Y overwrites X's bytes
+    crash_after(op_x, ["wl"])  # X finalizes the slot (Y delayed on WL)
+    assert op_y.step() == "wl" and op_y.state == "abort_cas"
+    crash_after(op_x, ["uh", "unlock"])
+    got = rb.poll()
+    assert got == b"Y" * 32  # same-size overwrite: Y's valid entry
+    assert rb.poll() is None
+
+
+def test_theorem2_busy_slot_not_skipped():
+    """Once a producer sets a busy bit, the consumer must traverse that slot
+    (Theorem 2): no later producer can steal it before consumption."""
+    _, rb = make_rb(n_slots=8, buf_size=1024)
+    x = RingProducer(rb, 1, lock_timeout_s=0.005)
+    y = RingProducer(rb, 2, lock_timeout_s=0.005)
+    op_x = x.start_append(b"FIRST")
+    crash_after(op_x, ["lock", "gh", "wb", "wl"])  # busy set, X dead
+    for i in range(3):
+        assert y.append(b"later%d" % i)
+    assert rb.poll() == b"FIRST"
+    assert rb.drain() == [b"later0", b"later1", b"later2"]
+
+
+# ----------------------------------------------------------------- property
+if HAVE_HYPOTHESIS:
+
+    @settings(max_examples=40, deadline=None)
+    @given(
+        msgs=st.lists(st.binary(min_size=0, max_size=300), min_size=1, max_size=60),
+        n_slots=st.integers(min_value=4, max_value=64),
+        buf_pow=st.integers(min_value=9, max_value=13),
+        consume_every=st.integers(min_value=1, max_value=5),
+    )
+    def test_property_all_committed_messages_delivered_in_order(
+        msgs, n_slots, buf_pow, consume_every
+    ):
+        fab = RdmaFabric()
+        rb = DoubleRingBuffer(fab, "prb", n_slots=n_slots, buf_size=1 << buf_pow)
+        p = RingProducer(rb, 3)
+        committed, delivered = [], []
+        for i, m in enumerate(msgs):
+            if len(m) + 16 > rb.buf_size:
+                continue
+            while not p.append(m):
+                got = rb.poll()
+                if got is None:
+                    break  # message genuinely cannot fit
+                if not isinstance(got, type(CORRUPT)):
+                    delivered.append(got)
+            else:
+                committed.append(m)
+            if i % consume_every == 0:
+                got = rb.poll()
+                if got is not None and not isinstance(got, type(CORRUPT)):
+                    delivered.append(got)
+        delivered.extend(x for x in rb.drain() if not isinstance(x, type(CORRUPT)))
+        assert delivered == committed
+
+    @settings(max_examples=25, deadline=None)
+    @given(
+        sizes=st.lists(st.integers(min_value=1, max_value=200), min_size=1, max_size=40),
+        region=st.integers(min_value=256, max_value=2048),
+    )
+    def test_property_wrap_rule_consumer_follows_producer(sizes, region):
+        """Both sides compute identical entry start positions (Theorem 2)."""
+        tail = head = 0
+        for s in sizes:
+            ps, tail = _advance(tail, s, region)
+            cs, head = _advance(head, s, region)
+            assert ps == cs
+            assert ps + s <= region  # entry never straddles the boundary
