@@ -26,9 +26,16 @@ msg = WorkflowMessage.new(app_id=7, payload={
     "latents": np.random.randn(2, 8, 8).astype(np.float32),
     "prompt": "a tiny video of a cat",
 })
-alice.append(msg.pack())
+# pack_parts(): header + tensor memoryviews flow to the ring through ONE
+# scatter-gather writev — no intermediate Python blob
+alice.append(msg.pack_parts())
 back = WorkflowMessage.unpack(ring.poll())
 print("roundtrip uid:", back.uid_hex[:8], "payload keys:", sorted(back.payload))
+
+# batched appends: one lock acquire + one tail-header doorbell for the burst
+burst = [WorkflowMessage.new(app_id=7, payload=np.float32(i)) for i in range(8)]
+alice.append_many([m.pack_parts() for m in burst])
+print("burst delivered:", len(ring.drain()), "messages")
 
 # --- 3. a workflow set: proxy -> stages -> replicated database --------------
 ws = WorkflowSet("quick")

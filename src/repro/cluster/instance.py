@@ -28,7 +28,8 @@ from repro.cluster.database import ReplicatedDatabase
 from repro.cluster.node_manager import NodeManager
 from repro.core.messaging import WorkflowMessage
 from repro.core.rdma import RdmaFabric
-from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer, RingProducer
+from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer
+from repro.core.transport import ChannelStats, Router
 
 
 @dataclass
@@ -41,29 +42,24 @@ class InstanceStats:
 
 
 class ResultDeliver:
-    """Round-robin delivery to next-hop inboxes over the RDMA fabric."""
+    """Delivery to next-hop inboxes over the unified transport Router:
+    round-robin across next-stage instances (§4.5), bounded retries on a
+    full ring then drop (§9), cached producers invalidated whenever the NM
+    reassigns a target away from a next-hop set."""
 
     def __init__(self, fabric: RdmaFabric, name: str, nm: NodeManager,
-                 database: Optional[ReplicatedDatabase]):
+                 database: Optional[ReplicatedDatabase],
+                 buffers: Optional[Dict[str, DoubleRingBuffer]] = None):
         self.fabric = fabric
         self.name = name
         self.nm = nm
         self.database = database
-        self._producers: Dict[str, RingProducer] = {}
-        self._rr: Dict[int, int] = {}
-        self._pid = abs(hash(name)) % (1 << 20)
-        self._lock = threading.Lock()
-
-    def _producer_for(self, target: str, buffers: Dict[str, DoubleRingBuffer]):
-        with self._lock:
-            if target not in self._producers:
-                self._producers[target] = RingProducer(
-                    buffers[target], self._pid, client=self.name
-                )
-            return self._producers[target]
+        self.router = Router(name, buffers if buffers is not None else {}, nm=nm)
 
     def deliver(self, msg: WorkflowMessage, stage: str,
-                buffers: Dict[str, DoubleRingBuffer]) -> bool:
+                buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> bool:
+        if buffers is not None and buffers is not self.router.buffers:
+            self.router.buffers = buffers
         hops = self.nm.next_hops(msg.app_id, stage)
         if not hops:
             return False
@@ -74,16 +70,10 @@ class ResultDeliver:
                 self.database.store(msg.uid_hex, msg.payload)
                 return True
             return False
-        # round-robin across next-stage instances (§4.5)
-        idx = self._rr.get(msg.app_id, 0)
-        self._rr[msg.app_id] = idx + 1
-        target = hops[idx % len(hops)]
-        prod = self._producer_for(target, buffers)
-        for _ in range(64):  # bounded retries on a full ring; then drop (§9)
-            if prod.append(msg.pack()):
-                return True
-            time.sleep(0.0005)
-        return False
+        return self.router.send(hops, msg, rr_key=msg.app_id) is not None
+
+    def transport_stats(self) -> ChannelStats:
+        return self.router.stats()
 
 
 class WorkflowInstance:
@@ -113,7 +103,7 @@ class WorkflowInstance:
         )
         self.buffers = buffers if buffers is not None else {}
         self.buffers[name] = self.inbox
-        self.rd = ResultDeliver(fabric, name, nm, database)
+        self.rd = ResultDeliver(fabric, name, nm, database, self.buffers)
         self.stats = InstanceStats()
         self._queue: "queue.Queue[WorkflowMessage]" = queue.Queue()
         self._stop = threading.Event()

@@ -64,6 +64,7 @@ class NodeManager:
         self.steal_below = steal_below
         self.window = window
         self.reassignments: List[Tuple[str, Optional[str], str]] = []  # audit log
+        self._topology_version = 0  # bumped whenever routing state changes
 
     # ------------------------------------------------------------ registry
     def register_instance(self, name: str, role: str = "workflow",
@@ -71,6 +72,7 @@ class NodeManager:
         with self._lock:
             self.instances[name] = InstanceInfo(name=name, role=role,
                                                 location=location or name)
+            self._topology_version += 1
 
     def register_workflow(self, wf: WorkflowSpec) -> None:
         with self._lock:
@@ -82,8 +84,15 @@ class NodeManager:
             self.reassignments.append((name, info.stage, stage or "idle"))
             info.stage = stage
             info.version += 1
+            self._topology_version += 1
 
     # ------------------------------------------------------------- queries
+    def topology_version(self) -> int:
+        """Monotonic counter bumped on every routing-relevant change; the
+        transport Router uses it to invalidate cached producers."""
+        with self._lock:
+            return self._topology_version
+
     def get_assignment(self, name: str) -> Tuple[Optional[str], int]:
         """-> (stage name or None for idle, version)."""
         with self._lock:
@@ -91,11 +100,12 @@ class NodeManager:
             return info.stage, info.version
 
     def stage_fn(self, app_id: int, stage: str):
-        wf = self.workflows[app_id]
-        for s in wf.stages:
-            if s.name == stage:
-                return s
-        raise KeyError(f"stage {stage} not in workflow {app_id}")
+        with self._lock:
+            wf = self.workflows[app_id]
+            for s in wf.stages:
+                if s.name == stage:
+                    return s
+            raise KeyError(f"stage {stage} not in workflow {app_id}")
 
     def stage_instances(self, stage: str) -> List[str]:
         with self._lock:
@@ -110,12 +120,13 @@ class NodeManager:
     def next_hops(self, app_id: int, stage: str) -> List[str]:
         """Routing: instances of the next stage for this app (§4.5), or
         ['__database__'] after the final stage."""
-        wf = self.workflows[app_id]
-        names = wf.stage_names()
-        idx = names.index(stage)
-        if idx + 1 >= len(names):
-            return [n for n, i in self.instances.items() if i.role == "database"]
-        return self.stage_instances(names[idx + 1])
+        with self._lock:
+            wf = self.workflows[app_id]
+            names = wf.stage_names()
+            idx = names.index(stage)
+            if idx + 1 >= len(names):
+                return [n for n, i in self.instances.items() if i.role == "database"]
+            return self.stage_instances(names[idx + 1])
 
     def location(self, name: str) -> str:
         with self._lock:

@@ -1,19 +1,22 @@
 """Proxy (§3.2): client entry point — UID assignment, fast-reject admission,
 entrance-stage injection over RDMA, result retrieval by UID.
+
+Entrance injection goes through the unified transport ``Router``: cached
+per-target channels, round-robin across entrance instances, bounded-retry
+then drop (§9), scatter-gather framing straight to the target ring.
 """
 from __future__ import annotations
 
-import threading
 import time
-import uuid as uuidlib
-from typing import Any, Dict, Optional
+from typing import Any, Dict, List, Optional
 
 from repro.cluster.database import ReplicatedDatabase
 from repro.cluster.node_manager import NodeManager
 from repro.core.messaging import WorkflowMessage
 from repro.core.rdma import RdmaFabric
 from repro.core.request_monitor import RequestMonitor
-from repro.core.ring_buffer import DoubleRingBuffer, RingProducer
+from repro.core.ring_buffer import DoubleRingBuffer
+from repro.core.transport import ChannelStats, Router
 
 
 class Rejected(Exception):
@@ -37,40 +40,47 @@ class Proxy:
         self.database = database
         self.buffers = buffers
         self.monitor = monitor
-        self._producers: Dict[str, RingProducer] = {}
-        self._rr = 0
-        self._lock = threading.Lock()
+        self.router = Router(name, buffers, nm=nm)
         nm.register_instance(name, role="proxy")
 
-    def _entrance_producer(self, target: str) -> RingProducer:
-        with self._lock:
-            if target not in self._producers:
-                self._producers[target] = RingProducer(
-                    self.buffers[target], abs(hash(self.name)) % (1 << 20),
-                    client=self.name,
-                )
-            return self._producers[target]
+    def _entrance_instances(self, app_id: int) -> List[str]:
+        wf = self.nm.workflows[app_id]
+        entrance = wf.stage_names()[0]
+        return self.nm.stage_instances(entrance)
 
     def submit(self, app_id: int, payload: Any) -> str:
         """Admit (or fast-reject) a generation request; returns the UID the
         client later polls with."""
         if self.monitor is not None and not self.monitor.try_admit():
             raise Rejected(f"proxy {self.name} over admissible rate")
-        wf = self.nm.workflows[app_id]
-        entrance = wf.stage_names()[0]
-        instances = self.nm.stage_instances(entrance)
+        instances = self._entrance_instances(app_id)
         if not instances:
-            raise Rejected(f"no instances for entrance stage {entrance}")
+            raise Rejected(f"no instances for entrance stage of app {app_id}")
         msg = WorkflowMessage.new(app_id=app_id, payload=payload, stage=0)
-        with self._lock:
-            self._rr += 1
-            target = instances[self._rr % len(instances)]
-        prod = self._entrance_producer(target)
-        for _ in range(64):
-            if prod.append(msg.pack()):
-                return msg.uid_hex
-            time.sleep(0.0005)
-        raise Rejected("entrance ring full")
+        if self.router.send(instances, msg, rr_key=("entrance", app_id)) is None:
+            raise Rejected("entrance ring full")
+        return msg.uid_hex
+
+    def submit_many(self, app_id: int, payloads: List[Any]) -> List[str]:
+        """Batched admission: one doorbell-batched ring append for the whole
+        burst.  Returns UIDs for the admitted-and-appended prefix.  Routing
+        is checked before any admission token is consumed; tokens spent on
+        requests later dropped at a full entrance ring are NOT refunded —
+        the same policy as ``submit`` (§9: drops, never retransmits)."""
+        instances = self._entrance_instances(app_id)
+        if not instances:
+            raise Rejected(f"no instances for entrance stage of app {app_id}")
+        if self.monitor is not None:
+            payloads = [p for p in payloads if self.monitor.try_admit()]
+        if not payloads:
+            return []
+        msgs = [WorkflowMessage.new(app_id=app_id, payload=p, stage=0)
+                for p in payloads]
+        n = self.router.send_many(instances, msgs, rr_key=("entrance", app_id))
+        return [m.uid_hex for m in msgs[:n]]
+
+    def transport_stats(self) -> ChannelStats:
+        return self.router.stats()
 
     def poll_result(self, uid: str) -> Optional[Any]:
         return self.database.fetch(uid)

@@ -16,6 +16,7 @@ from repro.cluster.proxy import Proxy, Rejected
 from repro.core.rdma import RdmaFabric
 from repro.core.request_monitor import RequestMonitor
 from repro.core.ring_buffer import DoubleRingBuffer
+from repro.core.transport import ChannelStats
 
 
 class WorkflowSet:
@@ -56,6 +57,17 @@ class WorkflowSet:
 
     def register_workflow(self, wf: WorkflowSpec) -> None:
         self.nm.register_workflow(wf)
+
+    # ------------------------------------------------------------- telemetry
+    def transport_stats(self) -> ChannelStats:
+        """Data-plane totals for the whole set: every proxy's entrance
+        channels plus every instance's delivery channels."""
+        total = ChannelStats()
+        for p in self.proxies:
+            total = total.merge(p.transport_stats())
+        for inst in self.instances.values():
+            total = total.merge(inst.rd.transport_stats())
+        return total
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:

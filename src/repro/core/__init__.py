@@ -3,12 +3,14 @@
   * rdma            — simulated one-sided RDMA fabric (read/write/CAS/FAA)
   * ring_buffer     — deadlock-free multi-producer double-ring buffer (§6.1)
   * messaging       — workflow message codec, arbitrary dynamic payloads (§4.1)
+  * transport       — unified Channel/Router data plane over the rings
   * pipeline_planner— Theorem-1 rate matching (§5)
   * request_monitor — proxy fast-reject admission control (§3.2, §5)
 """
 from repro.core.rdma import CostModel, FabricStats, MemoryRegion, RdmaFabric, SimulatedCrash, TcpCostModel
 from repro.core.ring_buffer import CORRUPT, AppendOp, Corrupt, DoubleRingBuffer, RingProducer
 from repro.core.messaging import HEADER_BYTES, WorkflowMessage
+from repro.core.transport import Channel, ChannelStats, Router
 from repro.core.pipeline_planner import (
     offered_rate,
     plan_chain,
@@ -21,8 +23,11 @@ from repro.core.request_monitor import RequestMonitor
 __all__ = [
     "AppendOp",
     "CORRUPT",
+    "Channel",
+    "ChannelStats",
     "Corrupt",
     "CostModel",
+    "Router",
     "DoubleRingBuffer",
     "FabricStats",
     "HEADER_BYTES",

@@ -8,7 +8,6 @@ Header fields (Figure 3): UUID, proxy timestamp, application id, stage.
 """
 from __future__ import annotations
 
-import io
 import json
 import struct
 import time
@@ -28,27 +27,38 @@ _KIND_TENSOR = 1
 _KIND_JSONTREE = 2
 
 
-def _encode_payload(payload: Payload) -> bytes:
-    """Self-describing encoding for arbitrary payload types."""
+Buf = Union[bytes, bytearray, memoryview]
+
+
+def _tensor_view(x: np.ndarray) -> Buf:
+    """Zero-copy byte view of a contiguous array (copies only if the input
+    was non-contiguous and ascontiguousarray had to materialize it)."""
+    if x.size == 0:
+        return b""  # memoryview cannot cast a view with zeros in its shape
+    return memoryview(np.ascontiguousarray(x)).cast("B")
+
+
+def _encode_payload_parts(payload: Payload) -> List[Buf]:
+    """Self-describing encoding for arbitrary payload types, as a gather
+    list of buffer parts.  Tensor bytes stay as memoryviews over the source
+    arrays — nothing is concatenated in Python; the fabric's scatter-gather
+    ``writev`` copies each part straight into the destination region."""
     if isinstance(payload, np.generic):  # numpy scalar -> 0-d tensor
         payload = np.asarray(payload)
-    if isinstance(payload, (bytes, bytearray)):
-        return struct.pack("<B", _KIND_BYTES) + bytes(payload)
+    if isinstance(payload, (bytes, bytearray, memoryview)):
+        return [struct.pack("<B", _KIND_BYTES), payload]
     if isinstance(payload, np.ndarray):
         meta = json.dumps({"dtype": payload.dtype.str, "shape": payload.shape}).encode()
-        return (
-            struct.pack("<BI", _KIND_TENSOR, len(meta))
-            + meta
-            + np.ascontiguousarray(payload).tobytes()
-        )
+        return [struct.pack("<BI", _KIND_TENSOR, len(meta)), meta,
+                _tensor_view(payload)]
     # generic pytree: JSON skeleton with tensor leaves hoisted to a blob list
-    blobs: List[np.ndarray] = []
+    blobs: List[memoryview] = []
 
     def hoist(x):
         if isinstance(x, np.generic):
             x = np.asarray(x)
         if isinstance(x, np.ndarray):
-            blobs.append(np.ascontiguousarray(x))
+            blobs.append(_tensor_view(x))
             return {"__tensor__": len(blobs) - 1,
                     "dtype": x.dtype.str, "shape": list(x.shape)}
         if isinstance(x, dict):
@@ -60,36 +70,41 @@ def _encode_payload(payload: Payload) -> bytes:
         raise TypeError(f"unsupported payload leaf {type(x)}")
 
     skel = json.dumps(hoist(payload)).encode()
-    out = io.BytesIO()
-    out.write(struct.pack("<BII", _KIND_JSONTREE, len(skel), len(blobs)))
-    out.write(skel)
+    parts: List[Buf] = [struct.pack("<BII", _KIND_JSONTREE, len(skel), len(blobs)), skel]
     for b in blobs:
-        raw = b.tobytes()
-        out.write(struct.pack("<Q", len(raw)))
-        out.write(raw)
-    return out.getvalue()
+        parts.append(struct.pack("<Q", len(b)))
+        parts.append(b)
+    return parts
 
 
-def _decode_payload(raw: bytes) -> Payload:
-    kind = raw[0]
+def _encode_payload(payload: Payload) -> bytes:
+    """Blob form of the encoding (one concatenation; legacy path)."""
+    return b"".join(_encode_payload_parts(payload))
+
+
+def _decode_payload(raw: Buf) -> Payload:
+    """Decode from any buffer; tensor leaves are zero-copy views into `raw`
+    (read-only, exactly like the seed's frombuffer-over-bytes behavior)."""
+    mv = memoryview(raw)
+    kind = mv[0]
     if kind == _KIND_BYTES:
-        return raw[1:]
+        return bytes(mv[1:])
     if kind == _KIND_TENSOR:
-        (mlen,) = struct.unpack_from("<I", raw, 1)
-        meta = json.loads(raw[5 : 5 + mlen])
-        return np.frombuffer(raw[5 + mlen :], dtype=np.dtype(meta["dtype"])).reshape(
+        (mlen,) = struct.unpack_from("<I", mv, 1)
+        meta = json.loads(bytes(mv[5 : 5 + mlen]))
+        return np.frombuffer(mv[5 + mlen :], dtype=np.dtype(meta["dtype"])).reshape(
             meta["shape"]
         )
     if kind == _KIND_JSONTREE:
-        slen, nblobs = struct.unpack_from("<II", raw, 1)
+        slen, nblobs = struct.unpack_from("<II", mv, 1)
         off = 9
-        skel = json.loads(raw[off : off + slen])
+        skel = json.loads(bytes(mv[off : off + slen]))
         off += slen
         blobs = []
         for _ in range(nblobs):
-            (blen,) = struct.unpack_from("<Q", raw, off)
+            (blen,) = struct.unpack_from("<Q", mv, off)
             off += 8
-            blobs.append(raw[off : off + blen])
+            blobs.append(mv[off : off + blen])
             off += blen
 
         def lower(x):
@@ -131,14 +146,24 @@ class WorkflowMessage:
     def uid_hex(self) -> str:
         return self.uid.hex()
 
+    def pack_parts(self) -> List[Buf]:
+        """Scatter-gather form of ``pack``: the wire header followed by the
+        payload's gather list.  No Python-level concatenation — handed to
+        ``RingProducer.append`` the parts flow to the ring via one
+        ``writev``."""
+        body = _encode_payload_parts(self.payload)
+        blen = sum(len(p) for p in body)
+        return [_HDR.pack(self.uid, self.timestamp, self.app_id, self.stage, blen),
+                *body]
+
     def pack(self) -> bytes:
-        body = _encode_payload(self.payload)
-        return _HDR.pack(self.uid, self.timestamp, self.app_id, self.stage, len(body)) + body
+        return b"".join(self.pack_parts())
 
     @classmethod
-    def unpack(cls, raw: bytes) -> "WorkflowMessage":
-        uid, ts, app_id, stage, plen = _HDR.unpack_from(raw, 0)
-        body = raw[HEADER_BYTES : HEADER_BYTES + plen]
+    def unpack(cls, raw: Buf) -> "WorkflowMessage":
+        mv = memoryview(raw)
+        uid, ts, app_id, stage, plen = _HDR.unpack_from(mv, 0)
+        body = mv[HEADER_BYTES : HEADER_BYTES + plen]
         return cls(uid=uid, timestamp=ts, app_id=app_id, stage=stage,
                    payload=_decode_payload(body))
 

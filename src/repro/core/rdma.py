@@ -25,9 +25,11 @@ import struct
 import threading
 import time
 from dataclasses import dataclass, field
-from typing import Callable, Dict, Optional
+from typing import Callable, Dict, Optional, Sequence, Union
 
 import numpy as np
+
+Buf = Union[bytes, bytearray, memoryview]
 
 _U64 = struct.Struct("<Q")
 
@@ -68,6 +70,11 @@ class FabricStats:
     ops: Dict[str, int] = field(default_factory=dict)
     bytes: Dict[str, int] = field(default_factory=dict)
     modeled_time_s: float = 0.0
+    # scatter-gather accounting: writev is recorded as a single "write" op
+    # (it is one one-sided WRITE with a sender-side gather list); these two
+    # fields let benchmarks report how many Python-level concats it elided.
+    writev_ops: int = 0
+    writev_parts: int = 0
 
     def record(self, verb: str, nbytes: int, t: float) -> None:
         self.ops[verb] = self.ops.get(verb, 0) + 1
@@ -141,6 +148,27 @@ class RdmaFabric:
             return  # dropped on the wire
         mr = self._mr(region)
         mr.buf[offset : offset + len(data)] = np.frombuffer(data, dtype=np.uint8)
+
+    def writev(
+        self, client: str, region: str, offset: int, parts: Sequence[Buf]
+    ) -> None:
+        """One-sided RDMA WRITE with a sender-side gather list (scatter-gather
+        framing): the NIC pulls each local buffer directly — no intermediate
+        concatenated blob.  Accounted as ONE ``write`` op so fault hooks and
+        op-count stats see exactly what the wire sees."""
+        total = sum(len(p) for p in parts)
+        if not self._account(client, "write", region, offset, total):
+            return  # dropped on the wire
+        with self._stats_lock:
+            self.stats.writev_ops += 1
+            self.stats.writev_parts += len(parts)
+        mr = self._mr(region)
+        pos = offset
+        for p in parts:
+            n = len(p)
+            if n:
+                mr.buf[pos : pos + n] = np.frombuffer(p, dtype=np.uint8)
+            pos += n
 
     def read(self, client: str, region: str, offset: int, nbytes: int) -> bytes:
         """One-sided RDMA READ."""

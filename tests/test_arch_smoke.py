@@ -15,6 +15,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
+
 from repro.configs import ARCH_IDS, get_config
 from repro.models import registry as R
 from repro.models.param import is_spec

@@ -12,6 +12,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
+
 from repro.configs import ARCH_IDS, SHAPES, get_config, supported_shapes
 from repro.launch import hlo_analysis as H
 from repro.launch.dryrun_lib import (

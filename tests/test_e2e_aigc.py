@@ -8,6 +8,8 @@ from __future__ import annotations
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
+
 from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
 from repro.core import plan_chain
 from repro.models.aigc import WanI2VPipeline, build_stage_fns

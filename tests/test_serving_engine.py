@@ -7,6 +7,8 @@ import jax
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
+
 from repro.configs import get_config
 from repro.serving import ServingEngine
 

@@ -11,6 +11,8 @@ import jax.numpy as jnp
 import numpy as np
 import pytest
 
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
+
 from repro.configs import get_config
 from repro.models import layers as L
 from repro.models import registry as R

@@ -1,0 +1,464 @@
+"""Transport-layer tests: scatter-gather framing (writev), pack_parts /
+memoryview decode, doorbell-batched append_many (incl. Cases-2/3/6 abort
+semantics under a lock takeover), Channel/Router drop policy, producer-cache
+invalidation on NM reassignment, and fabric op-count regression guards.
+"""
+from __future__ import annotations
+
+import threading
+
+import numpy as np
+import pytest
+
+from repro.cluster import NodeManager, StageSpec, WorkflowSet, WorkflowSpec
+from repro.core import (
+    CORRUPT,
+    Channel,
+    DoubleRingBuffer,
+    RdmaFabric,
+    RingProducer,
+    Router,
+    WorkflowMessage,
+)
+from repro.core.ring_buffer import ENTRY_HDR_BYTES, _advance
+
+try:
+    from hypothesis import given, settings, strategies as st
+
+    HAVE_HYPOTHESIS = True
+except ImportError:  # pragma: no cover
+    HAVE_HYPOTHESIS = False
+
+
+def make_rb(n_slots=32, buf_size=4096, name="trb"):
+    fab = RdmaFabric()
+    return fab, DoubleRingBuffer(fab, name, n_slots=n_slots, buf_size=buf_size)
+
+
+# ------------------------------------------------------------------- writev
+def test_writev_is_one_accounted_op():
+    fab = RdmaFabric()
+    fab.register("r", 256)
+    parts = [b"head", memoryview(b"-body-"), bytearray(b"tail")]
+    fab.writev("c", "r", 8, parts)
+    assert fab.stats.ops == {"write": 1}          # ONE one-sided WRITE
+    assert fab.stats.bytes["write"] == 14
+    assert fab.stats.writev_ops == 1 and fab.stats.writev_parts == 3
+    assert fab.read("c", "r", 8, 14) == b"head-body-tail"
+
+
+def test_writev_respects_drop_hook():
+    fab = RdmaFabric()
+    fab.register("r", 64)
+    fab.fault_hook = lambda client, verb, region, off, n: client != "lossy"
+    fab.writev("lossy", "r", 0, [b"AA", b"BB"])
+    assert fab.read("ok", "r", 0, 4) == b"\x00" * 4  # dropped on the wire
+
+
+# ------------------------------------------- scatter-gather ring appends
+def test_append_accepts_parts_and_roundtrips():
+    _, rb = make_rb()
+    p = RingProducer(rb, 1)
+    arr = np.arange(8, dtype=np.float32)
+    parts = [b"hdr|", memoryview(arr).cast("B"), bytearray(b"|tl"), b""]
+    assert p.append(parts)
+    got = rb.poll()
+    assert got == b"hdr|" + arr.tobytes() + b"|tl"
+
+
+def test_sg_append_wrap_rule_edge_cases():
+    """Multi-part entries obey the same wrap rule as blob entries: an entry
+    never straddles the region end; the tail fragment is skipped."""
+    _, rb = make_rb(n_slots=64, buf_size=256)
+    p = RingProducer(rb, 1)
+    # entry size = 16 + 84 = 100; two fit (200), the third wraps (skip 56)
+    msgs = [[bytes([i]) * 40, bytes([i + 100]) * 44] for i in range(5)]
+    flat = [b"".join(m) for m in msgs]
+    out = []
+    for m in msgs:
+        while not p.append(m):
+            got = rb.poll()
+            assert got is not None
+            out.append(got)
+    out.extend(x for x in rb.drain())
+    assert out == flat
+    # exact-fit entry: payload sized so pos + size == region (no skip)
+    _, rb2 = make_rb(n_slots=8, buf_size=128)
+    p2 = RingProducer(rb2, 1)
+    exact = [b"x" * 50, b"y" * (128 - ENTRY_HDR_BYTES - 50)]
+    assert p2.append(exact)
+    pos, new = _advance(0, 128, 128)
+    assert (pos, new) == (0, 128)
+    assert rb2.poll() == b"".join(exact)
+
+
+def test_append_many_basic_batch_roundtrip():
+    fab, rb = make_rb()
+    p = RingProducer(rb, 1)
+    payloads = [bytes([i]) * (1 + 7 * i) for i in range(10)]
+    assert p.append_many(payloads) == 10
+    assert rb.stats.produced == 10
+    assert rb.drain() == payloads
+    # one lock acquire + one unlock for the whole batch -> exactly 2 CAS on
+    # the lock word, 10 on the size slots
+    assert fab.stats.ops["cas"] == 12
+
+
+def test_append_many_partial_on_full_then_recovers():
+    _, rb = make_rb(n_slots=4, buf_size=256)
+    p = RingProducer(rb, 1)
+    n = p.append_many([b"a" * 50, b"b" * 50, b"c" * 50, b"d" * 50, b"e" * 50])
+    assert n == 3  # 3 slots usable before ts - hs >= n_slots... or space
+    assert rb.stats.aborts_full == 1
+    assert rb.drain() == [b"a" * 50, b"b" * 50, b"c" * 50]
+    assert p.append_many([b"d" * 50, b"e" * 50]) == 2
+    assert rb.drain() == [b"d" * 50, b"e" * 50]
+
+
+def test_append_many_wraps_like_sequential_appends():
+    """Batched appends land at exactly the positions sequential appends
+    would choose (Theorem-2 determinism of the wrap rule)."""
+    _, rb1 = make_rb(n_slots=64, buf_size=512, name="a")
+    _, rb2 = make_rb(n_slots=64, buf_size=512, name="b")
+    p1, p2 = RingProducer(rb1, 1), RingProducer(rb2, 1)
+    msgs = [bytes([i]) * 90 for i in range(40)]
+    out1, out2 = [], []
+    i = 0
+    while i < len(msgs):
+        n = p1.append_many(msgs[i : i + 4])
+        for m in msgs[i : i + n]:
+            assert p2.append(m)
+        if n < 4:
+            out1.extend(rb1.drain())
+            out2.extend(rb2.drain())
+        i += n
+    out1.extend(rb1.drain())
+    out2.extend(rb2.drain())
+    assert out1 == out2 == msgs
+
+
+def test_append_many_interleaving_preserves_cases_236_abort():
+    """A delayed batch producer that loses a size-slot CAS to a lock
+    takeover (the batched analogue of Cases 2/3/6) aborts the rest of the
+    batch immediately: its committed prefix was already recovered past by
+    the new lock holder, and the consumer stays consistent."""
+    fab, rb = make_rb(n_slots=16, buf_size=4096)
+    x = RingProducer(rb, 1, lock_timeout_s=10.0)
+    y = RingProducer(rb, 2, lock_timeout_s=0.0005)
+    fired = {"done": False}
+
+    def hook(client, verb, region, offset, n):
+        # X stalls right before its second slot CAS; Y times out, takes the
+        # lock over, Case-7-recovers past X's committed entry 0 and claims
+        # slot 1 first.
+        if (verb == "cas" and client == x.client and not fired["done"]
+                and offset == rb._slot_addr(1)):
+            fired["done"] = True
+            fab.fault_hook = None
+            assert y.append(b"Y" * 8)
+        return True
+
+    fab.fault_hook = hook
+    n = x.append_many([b"A" * 8, b"B" * 8, b"C" * 8])
+    assert fired["done"]
+    assert n == 1                        # only the pre-takeover prefix
+    assert rb.stats.aborts_cas == 1      # the batch aborted on the lost CAS
+    assert rb.stats.lock_takeovers == 1
+    assert rb.stats.case7_recoveries == 1
+    # consumer: X's entry 0 (recovered by Y), then Y's same-size entry which
+    # overwrote X's entry 1 bytes (Case 2: complete same-size entry wins)
+    assert rb.poll() == b"A" * 8
+    assert rb.poll() == b"Y" * 8
+    assert rb.poll() is None
+    # liveness: the ring keeps working afterwards
+    assert y.append(b"AFTER")
+    assert rb.poll() == b"AFTER"
+
+
+def test_token_nonzero_for_any_producer_after_nonce_wrap():
+    _, rb = make_rb()
+    for pid in (0, 1, 255):
+        p = RingProducer(rb, pid)
+        p._nonce = 0xFFFFFF  # next increment wraps
+        tok = p._new_token()
+        assert tok != 0
+        assert tok & 0xFFFFFF != 0  # nonce itself never wraps to 0
+
+
+# --------------------------------------------------- pack_parts / decode
+PAYLOAD_CASES = [
+    b"",
+    b"\x00\x01raw\xff",
+    np.float32(3.25),                       # 0-d scalar
+    np.int64(-7),
+    np.arange(12, dtype=np.float16).reshape(3, 4),
+    np.zeros((0, 5), np.int32),             # empty tensor
+    {"a": np.arange(4, dtype=np.uint8), "b": [np.float64(1.5), "s", None],
+     "c": {"deep": np.ones((2, 2), np.float32), "n": 3}},
+    [np.bool_(True), {"x": np.arange(3)}, (1, 2.5, "t")],
+    "just a string",
+    {"meta": {"steps": 50}, "none": None},
+]
+
+
+def _assert_payload_equal(a, b):
+    if isinstance(a, np.ndarray):
+        assert isinstance(b, np.ndarray)
+        assert a.dtype == b.dtype and a.shape == b.shape
+        np.testing.assert_array_equal(a, b)
+    elif isinstance(a, dict):
+        assert set(a) == set(b)
+        for k in a:
+            _assert_payload_equal(a[k], b[k])
+    elif isinstance(a, (list, tuple)):
+        assert len(a) == len(b)
+        for x, y in zip(a, b):
+            _assert_payload_equal(x, y)
+    elif isinstance(a, np.generic):
+        np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    else:
+        assert a == b
+
+
+@pytest.mark.parametrize("payload", PAYLOAD_CASES, ids=range(len(PAYLOAD_CASES)))
+def test_pack_parts_matches_pack_and_roundtrips(payload):
+    m = WorkflowMessage.new(7, payload=payload, stage=2)
+    joined = b"".join(bytes(p) for p in m.pack_parts())
+    assert joined == m.pack()
+    # decode from an immutable blob and from a memoryview
+    for raw in (joined, memoryview(joined)):
+        m2 = WorkflowMessage.unpack(raw)
+        assert (m2.uid, m2.app_id, m2.stage) == (m.uid, 7, 2)
+        _assert_payload_equal(m.payload if not isinstance(m.payload, np.generic)
+                              else np.asarray(m.payload), m2.payload)
+
+
+@pytest.mark.parametrize("payload", PAYLOAD_CASES, ids=range(len(PAYLOAD_CASES)))
+def test_pack_parts_through_ring_roundtrips(payload):
+    """Full data plane: parts -> writev -> ring -> poll -> unpack."""
+    _, rb = make_rb(buf_size=1 << 16)
+    p = RingProducer(rb, 1)
+    m = WorkflowMessage.new(3, payload=payload)
+    assert p.append(m.pack_parts())
+    raw = rb.poll()
+    assert raw is not None and not isinstance(raw, type(CORRUPT))
+    m2 = WorkflowMessage.unpack(raw)
+    _assert_payload_equal(m.payload if not isinstance(m.payload, np.generic)
+                          else np.asarray(m.payload), m2.payload)
+
+
+if HAVE_HYPOTHESIS:
+
+    _leaf = st.one_of(
+        st.binary(max_size=64),
+        st.text(max_size=16),
+        st.integers(-2**31, 2**31 - 1),
+        st.booleans(),
+        st.none(),
+        st.integers(0, 100).map(lambda n: np.arange(n, dtype=np.float32)),
+        st.floats(-1e6, 1e6).map(np.float64),  # 0-d scalar leaves
+    )
+    _tree = st.recursive(
+        _leaf,
+        lambda kids: st.one_of(
+            st.lists(kids, max_size=4),
+            st.dictionaries(st.text(max_size=6), kids, max_size=4),
+        ),
+        max_leaves=8,
+    )
+
+    @settings(max_examples=60, deadline=None)
+    @given(payload=_tree)
+    def test_property_pack_parts_fuzz_roundtrip(payload):
+        if isinstance(payload, bytes):
+            pass  # top-level bytes use the KIND_BYTES path — still valid
+        m = WorkflowMessage.new(1, payload=payload)
+        joined = b"".join(bytes(p) for p in m.pack_parts())
+        assert joined == m.pack()
+        m2 = WorkflowMessage.unpack(memoryview(joined))
+        norm = np.asarray(payload) if isinstance(payload, np.generic) else payload
+        _assert_payload_equal(norm, m2.payload)
+
+
+# ------------------------------------------------------- Channel / Router
+def test_channel_bounded_retry_then_drop():
+    _, rb = make_rb(n_slots=4, buf_size=128)
+    ch = Channel(RingProducer(rb, 1), "t", max_retries=3, retry_interval_s=0.0)
+    big = WorkflowMessage.new(1, payload=b"z" * 64)
+    assert ch.send(big)
+    assert not ch.send(big)  # ring full, never retransmitted (§9)
+    assert ch.stats.sent == 1 and ch.stats.dropped == 1
+    assert ch.stats.retries >= 3
+
+
+def test_router_round_robin_and_stats():
+    fab = RdmaFabric()
+    buffers = {
+        "i0": DoubleRingBuffer(fab, "i0", n_slots=16, buf_size=4096),
+        "i1": DoubleRingBuffer(fab, "i1", n_slots=16, buf_size=4096),
+    }
+    r = Router("sender", buffers)
+    targets = ["i0", "i1"]
+    chosen = [r.send(targets, WorkflowMessage.new(1, payload=b"m"), rr_key=1)
+              for _ in range(6)]
+    assert chosen.count("i0") == 3 and chosen.count("i1") == 3
+    assert len(buffers["i0"].drain()) == 3
+    assert r.stats().sent == 6 and r.stats().dropped == 0
+
+
+def test_router_send_many_batches_to_one_target():
+    fab = RdmaFabric()
+    buffers = {"i0": DoubleRingBuffer(fab, "i0", n_slots=64, buf_size=1 << 16)}
+    r = Router("sender", buffers)
+    msgs = [WorkflowMessage.new(1, payload=bytes([i]) * 10) for i in range(8)]
+    assert r.send_many(["i0"], msgs) == 8
+    raws = buffers["i0"].drain()
+    assert [WorkflowMessage.unpack(x).payload for x in raws] == \
+        [m.payload for m in msgs]
+    assert r.stats().batches == 1 and r.stats().sent == 8
+
+
+def test_router_evicts_cached_producers_on_nm_reassignment():
+    """Satellite: after the NM reassigns a target away from a next-hop set,
+    the stale cached producer must go (it used to live forever)."""
+    nm = NodeManager()
+    fab = RdmaFabric()
+    buffers = {
+        "a": DoubleRingBuffer(fab, "a", n_slots=8, buf_size=1024),
+        "b": DoubleRingBuffer(fab, "b", n_slots=8, buf_size=1024),
+    }
+    nm.register_instance("a")
+    nm.register_instance("b")
+    r = Router("sender", buffers, nm=nm)
+    r.channel("a")
+    r.channel("b")
+    assert sorted(r.cached_targets()) == ["a", "b"]
+    nm.assign("a", "some-other-stage")  # reassignment bumps topology version
+    r.channel("b")  # next touch notices the version change
+    assert r.cached_targets() == ["b"]
+    # stats survive eviction
+    r.send(["b"], WorkflowMessage.new(1, payload=b"x"))
+    assert r.stats().sent == 1
+
+
+def test_recreated_channel_gets_disjoint_token_stream():
+    """After an invalidation, a recreated producer must not replay the
+    evicted producer's token stream: an evicted channel can still be
+    mid-send in another thread, and identical (pid, nonce) tokens would
+    let a takeover CAS succeed against a live lock holder."""
+    nm = NodeManager()
+    fab = RdmaFabric()
+    buffers = {"a": DoubleRingBuffer(fab, "a", n_slots=8, buf_size=1024)}
+    nm.register_instance("a")
+    r = Router("sender", buffers, nm=nm)
+    old = r.channel("a").producer
+    nm.assign("a", "elsewhere")  # bump topology -> eviction on next touch
+    new = r.channel("a").producer
+    assert new is not old
+    assert new.producer_id != old.producer_id
+    assert new._new_token() != old._new_token()
+
+
+def test_result_deliver_cache_follows_rebalance():
+    """End-to-end flavor of the same satellite: ResultDeliver's producer
+    cache tracks next_hops after an NM reassignment."""
+    ws = WorkflowSet("ev")
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s1", fn=lambda p: p, exec_time_s=0.001),
+        StageSpec("s2", fn=lambda p: p, exec_time_s=0.001),
+    ]))
+    ws.add_instance("x", stage="s1")
+    ws.add_instance("h0", stage="s2")
+    ws.add_instance("h1", stage="s2")
+    rd = ws.instances["ev.x"].rd
+    msg = WorkflowMessage.new(1, payload=b"p", stage=0)
+    for _ in range(2):
+        assert rd.deliver(msg, "s1", ws.buffers)
+    assert sorted(rd.router.cached_targets()) == ["ev.h0", "ev.h1"]
+    ws.nm.assign("ev.h0", "s1")  # NM moves h0 away from the s2 hop set
+    assert rd.deliver(msg, "s1", ws.buffers)
+    assert rd.router.cached_targets() == ["ev.h1"]
+
+
+def test_proxy_submit_many_end_to_end():
+    ws = WorkflowSet("bm")
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s", fn=lambda p: p * 2.0, exec_time_s=0.0005),
+    ]))
+    ws.add_instance("i0", stage="s")
+    proxy = ws.add_proxy("p0")
+    with ws:
+        uids = proxy.submit_many(1, [np.float32(i) for i in range(16)])
+        assert len(uids) == 16
+        for i, u in enumerate(uids):
+            assert proxy.wait_result(u, timeout_s=5) == np.float32(i * 2)
+    assert ws.transport_stats().sent >= 16
+
+
+def test_nm_queries_are_lock_safe_under_concurrent_reassignment():
+    """next_hops/stage_fn vs assign racing must never raise."""
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s1"), StageSpec("s2"),
+    ]))
+    for i in range(8):
+        nm.register_instance(f"i{i}")
+        nm.assign(f"i{i}", "s2")
+    stop = threading.Event()
+    errors = []
+
+    def churn():
+        i = 0
+        while not stop.is_set():
+            nm.assign(f"i{i % 8}", "s2" if i % 2 else "s1")
+            i += 1
+
+    def query():
+        while not stop.is_set():
+            try:
+                nm.next_hops(1, "s1")
+                nm.stage_fn(1, "s2")
+            except Exception as e:  # pragma: no cover
+                errors.append(e)
+
+    ts = [threading.Thread(target=churn), threading.Thread(target=query)]
+    for t in ts:
+        t.start()
+    stop.wait(0.3)
+    stop.set()
+    for t in ts:
+        t.join()
+    assert not errors
+
+
+# ------------------------------------------------- op-count regressions
+def test_fabric_ops_per_message_budget():
+    """Regression guard for the coalesced data plane: one append + one poll
+    must cost at most 12 fabric ops (the seed sequence cost 15: 3-read poll
+    head, two-write UH, two-write head advance)."""
+    fab, rb = make_rb()
+    p = RingProducer(rb, 1)
+    p.append(b"warm")
+    rb.poll()
+    before = fab.stats.total_ops
+    assert p.append(b"x" * 100)
+    assert rb.poll() == b"x" * 100
+    assert fab.stats.total_ops - before <= 12
+
+
+def test_append_many_amortizes_fabric_ops():
+    fab, rb = make_rb(n_slots=128, buf_size=1 << 16)
+    p = RingProducer(rb, 1)
+    p.append(b"warm")
+    rb.poll()
+    before = fab.stats.total_ops
+    assert p.append_many([b"m" * 32] * 16) == 16
+    batched = fab.stats.total_ops - before
+    rb.drain()
+    before = fab.stats.total_ops
+    for _ in range(16):
+        assert p.append(b"m" * 32)
+    unbatched = fab.stats.total_ops - before
+    # 3N+4 vs 7N: at N=16 the batch should need well under 2/3 the ops
+    assert batched < unbatched * 2 / 3
+    assert rb.drain() == [b"m" * 32] * 16
