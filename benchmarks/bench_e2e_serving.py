@@ -1,5 +1,8 @@
 """End-to-end serving benchmark on the executable small pipeline:
-sequential (monolithic) vs pipelined OnePiece workflow set throughput."""
+sequential (monolithic) vs pipelined OnePiece workflow set throughput,
+per-request submission vs cross-request microbatching (PR 3), and the
+ServingEngine's on-device scan decode vs the seed's token-at-a-time loop.
+"""
 from __future__ import annotations
 
 import time
@@ -9,26 +12,94 @@ import numpy as np
 
 from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
 from repro.core import plan_chain
+from repro.core.batching import stack_payloads
 from repro.models.aigc import WanI2VPipeline, build_stage_fns
 from repro.models.aigc.pipeline import measure_stage_times
 
-N_REQ = 6
+N_REQ = 16
+N_TRIALS = 2  # best-of (drops OS-scheduler noise; both arms get it)
+STAGES = ("text_encode", "vae_encode", "diffusion", "vae_decode")
 
 
-def run() -> List[Tuple[str, float, str]]:
-    pipe = WanI2VPipeline()
-    cfg = pipe.cfg
-    rng = np.random.default_rng(0)
-
-    def make_req(i):
+def _make_reqs(cfg, n):
+    def make(i):
+        rng = np.random.default_rng(i)
         return {
             "tokens": rng.integers(0, cfg.text_vocab, (1, cfg.text_len)).astype(np.int32),
             "image": (rng.standard_normal((1, cfg.image_size, cfg.image_size, 3))
                       * 0.1).astype(np.float32),
             "seed": i,
         }
+    return [make(i) for i in range(n)]
 
-    reqs = [make_req(i) for i in range(N_REQ)]
+
+def _build_ws(name, fns, times, *, max_batch, plan=None):
+    ws = WorkflowSet(name)
+    ws.register_workflow(WorkflowSpec(1, "i2v", [
+        StageSpec(s, fn=fns[s], exec_time_s=times[s]) for s in STAGES
+    ]))
+    plan = plan or {s: 1 for s in STAGES}
+    for s in STAGES:
+        for i in range(plan[s]):
+            ws.add_instance(f"{s}_{i}", stage=s, max_batch=max_batch,
+                            max_wait_s=0.05, pad_to_full=max_batch > 1)
+    proxy = ws.add_proxy("p0")
+    return ws, proxy
+
+
+def _run_ws(ws, proxy, reqs, *, batched):
+    best = float("inf")
+    with ws:
+        for _ in range(N_TRIALS):
+            t0 = time.perf_counter()
+            if batched:
+                uids = proxy.submit_many(1, reqs)
+            else:
+                uids = [proxy.submit(1, r) for r in reqs]
+            outs = [proxy.wait_result(u, timeout_s=120) for u in uids]
+            dt = time.perf_counter() - t0
+            assert len(outs) == len(reqs)
+            assert all(np.isfinite(o).all() for o in outs)
+            best = min(best, dt)
+    return best
+
+
+def _bench_engine_decode() -> List[Tuple[str, float, str]]:
+    """ServingEngine: one-scan decode (1 host sync) vs token loop (1 sync
+    per token) on a reduced LM."""
+    import dataclasses
+
+    from repro.configs import get_config
+    from repro.serving import ServingEngine
+
+    cfg = dataclasses.replace(get_config("qwen3-1.7b").reduced(), dtype="float32")
+    steps = 48
+    eng = ServingEngine(cfg, max_len=64)
+    prompts = np.random.default_rng(0).integers(
+        0, cfg.vocab_size, (4, 8)).astype(np.int32)
+    eng.generate(prompts, steps=steps)            # warm (compile)
+    eng.generate_reference(prompts, steps=steps)  # warm (compile)
+    t0 = time.perf_counter()
+    a = eng.generate(prompts, steps=steps)
+    scan_s = time.perf_counter() - t0
+    t0 = time.perf_counter()
+    b = eng.generate_reference(prompts, steps=steps)
+    loop_s = time.perf_counter() - t0
+    assert (a.tokens == b.tokens).all(), "scan decode diverged from token loop"
+    return [
+        ("lm_decode_scan_tok_s", scan_s / steps * 1e6,
+         f"steps={steps};total_s={scan_s:.3f};host_syncs=1"),
+        ("lm_decode_token_loop_tok_s", loop_s / steps * 1e6,
+         f"steps={steps};total_s={loop_s:.3f};host_syncs={steps};"
+         f"scan_speedup={loop_s/scan_s:.2f}x"),
+    ]
+
+
+def run() -> List[Tuple[str, float, str]]:
+    pipe = WanI2VPipeline()
+    cfg = pipe.cfg
+    reqs = _make_reqs(cfg, N_REQ)
+    fns = build_stage_fns(pipe)
 
     # --- monolithic: requests processed sequentially in one instance --------
     pipe.generate(reqs[0]["tokens"], reqs[0]["image"])  # warm
@@ -37,30 +108,38 @@ def run() -> List[Tuple[str, float, str]]:
         pipe.generate(r["tokens"], r["image"], seed=r["seed"])
     mono_s = time.perf_counter() - t0
 
-    # --- OnePiece: Theorem-1-planned workflow set ----------------------------
-    fns = build_stage_fns(pipe)
+    # warm the jitted stages at both batch sizes the sets will see
+    for bs in (1, N_REQ):
+        p, _ = stack_payloads(reqs[:bs])
+        for s in STAGES:
+            p = fns[s](p)
+
     times = measure_stage_times(pipe)
-    stages = list(times)
-    plan = plan_chain([times[s] for s in stages], 1)
-    ws = WorkflowSet("bench")
-    ws.register_workflow(WorkflowSpec(1, "i2v", [
-        StageSpec(s, fn=fns[s], exec_time_s=times[s]) for s in stages
-    ]))
-    for s, n in zip(stages, plan):
-        for i in range(n):
-            ws.add_instance(f"{s}_{i}", stage=s)
-    proxy = ws.add_proxy("p0")
-    with ws:
-        t0 = time.perf_counter()
-        uids = [proxy.submit(1, r) for r in reqs]
-        outs = [proxy.wait_result(u, timeout_s=120) for u in uids]
-        ws_s = time.perf_counter() - t0
-    assert all(np.isfinite(o).all() for o in outs)
+
+    # --- OnePiece, per-request: one jitted dispatch per request per stage ---
+    ws, proxy = _build_ws("bench_seq", fns, times, max_batch=1)
+    seq_s = _run_ws(ws, proxy, reqs, batched=False)
+
+    # --- OnePiece, microbatched: requests coalesce into one stacked call ----
+    ws, proxy = _build_ws("bench_mb", fns, times, max_batch=N_REQ)
+    mb_s = _run_ws(ws, proxy, reqs, batched=True)
+
+    # --- OnePiece, Theorem-1 planned (per-request; the PR-2 comparison) -----
+    plan = dict(zip(STAGES, plan_chain([times[s] for s in STAGES], 1)))
+    ws, proxy = _build_ws("bench_plan", fns, times, max_batch=1, plan=plan)
+    plan_s = _run_ws(ws, proxy, reqs, batched=False)
 
     return [
         ("e2e_monolithic_req_s", mono_s / N_REQ * 1e6,
          f"reqs={N_REQ};total_s={mono_s:.2f};throughput={N_REQ/mono_s:.2f}/s"),
-        ("e2e_onepiece_req_s", ws_s / N_REQ * 1e6,
-         f"reqs={N_REQ};total_s={ws_s:.2f};throughput={N_REQ/ws_s:.2f}/s;"
-         f"plan={','.join(map(str, plan))};speedup={mono_s/ws_s:.2f}x"),
-    ]
+        ("e2e_onepiece_req_s", seq_s / N_REQ * 1e6,
+         f"reqs={N_REQ};total_s={seq_s:.2f};throughput={N_REQ/seq_s:.2f}/s;"
+         f"max_batch=1;speedup_vs_mono={mono_s/seq_s:.2f}x"),
+        ("e2e_onepiece_batched_req_s", mb_s / N_REQ * 1e6,
+         f"reqs={N_REQ};total_s={mb_s:.2f};throughput={N_REQ/mb_s:.2f}/s;"
+         f"max_batch={N_REQ};speedup_vs_unbatched={seq_s/mb_s:.2f}x"),
+        ("e2e_onepiece_planned_req_s", plan_s / N_REQ * 1e6,
+         f"reqs={N_REQ};total_s={plan_s:.2f};throughput={N_REQ/plan_s:.2f}/s;"
+         f"plan={','.join(str(plan[s]) for s in STAGES)};"
+         f"speedup_vs_mono={mono_s/plan_s:.2f}x"),
+    ] + _bench_engine_decode()

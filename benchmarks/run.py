@@ -1,11 +1,16 @@
 """Benchmark harness — one function per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV rows.
 
-    PYTHONPATH=src python -m benchmarks.run [--only transport,...]
+    PYTHONPATH=src python -m benchmarks.run [--only transport,...] \
+        [--json BENCH_PR3.json]
+
+``--json`` additionally writes the rows (plus failures) to a JSON file so
+each PR's perf numbers are recorded and diffable across the repo history.
 """
 from __future__ import annotations
 
 import argparse
+import json
 import sys
 import traceback
 
@@ -16,10 +21,13 @@ SUITES = ("transport", "disaggregation", "pipelining", "elastic",
 def main() -> int:
     ap = argparse.ArgumentParser()
     ap.add_argument("--only", default="", help="comma-separated suite names")
+    ap.add_argument("--json", default="", metavar="PATH",
+                    help="also write rows to this JSON file")
     args = ap.parse_args()
     only = set(filter(None, args.only.split(",")))
 
     failures = 0
+    records = []
     print("name,us_per_call,derived")
     for suite in SUITES:
         if only and suite not in only:
@@ -31,10 +39,19 @@ def main() -> int:
                 mod = __import__(f"benchmarks.bench_{suite}", fromlist=["run"])
             for name, us, derived in mod.run():
                 print(f"{name},{us:.3f},{derived}", flush=True)
+                records.append({"suite": suite, "name": name,
+                                "us_per_call": round(us, 3),
+                                "derived": derived})
         except Exception:
             failures += 1
             print(f"{suite},NaN,FAILED")
+            records.append({"suite": suite, "name": suite,
+                            "us_per_call": None, "derived": "FAILED"})
             traceback.print_exc(file=sys.stderr)
+    if args.json:
+        with open(args.json, "w") as f:
+            json.dump({"rows": records, "failures": failures}, f, indent=2)
+            f.write("\n")
     return failures
 
 

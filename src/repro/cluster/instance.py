@@ -3,15 +3,29 @@ ResultDeliver, communicating over the one-sided-RDMA double-ring buffers.
 
   * TaskManager      — polls the NM for its stage assignment + routing and
                        reports utilization (§4.2).
-  * RequestScheduler — watches the instance's inbox memory region; Individual
-                       Mode pulls from a shared local queue (idle workers
-                       fetch — natural load balance), Collaboration Mode
-                       broadcasts each request to every worker (§4.3).
-  * TaskWorker       — runs the user-defined stage function; in CM the
+  * RequestScheduler — watches the instance's inbox memory region and
+                       coalesces same-shape requests into microbatches
+                       (``max_batch``/``max_wait_s``, shape-bucketed so a
+                       batch never mixes jit signatures); Individual Mode
+                       pushes batches onto a shared local queue (idle
+                       workers fetch — natural load balance), Collaboration
+                       Mode broadcasts each batch to every worker (§4.3).
+  * TaskWorker       — runs the user-defined stage function once per
+                       *batch* (payloads stacked along axis 0); in CM the
                        workers' partial results are aggregated before
                        delivery (§4.4-4.5).
-  * ResultDeliver    — round-robin RDMA append to next-hop inboxes; final
-                       stage stores into the replicated database (§4.5).
+  * ResultDeliver    — splits each batch result back into per-request
+                       slices and routes every request under its own UID:
+                       round-robin RDMA append to next-hop inboxes (whole
+                       batches ride one doorbell-batched append so they
+                       re-coalesce downstream); final stage stores into
+                       the replicated database (§4.5).
+
+With ``max_batch=1`` (the default) every path is identical to the
+pre-batching per-request behavior — stage functions receive the raw
+payload, untouched.  With ``max_batch>1`` stage functions must be
+batch-aware: they receive one stacked pytree (see repro.core.batching)
+and return a result whose array leaves split along axis 0.
 
 Messages lost between stages are NOT retransmitted (§9) — the fast-reject +
 transient-result design makes retries worse than drops.
@@ -26,17 +40,22 @@ from typing import Any, Callable, Dict, List, Optional
 
 from repro.cluster.database import ReplicatedDatabase
 from repro.cluster.node_manager import NodeManager
+from repro.core.batching import Coalescer, bucket_key, stack_payloads, unstack_payload
 from repro.core.messaging import WorkflowMessage
 from repro.core.rdma import RdmaFabric
 from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer
 from repro.core.transport import ChannelStats, Router
 
+_DROP = object()  # per-message failure sentinel inside a batch result
+
 
 @dataclass
 class InstanceStats:
-    processed: int = 0
+    processed: int = 0       # requests through the stage fn
     delivered: int = 0
     dropped: int = 0
+    batches: int = 0         # stage-fn invocations (== processed iff unbatched)
+    solo_fallbacks: int = 0  # batches degraded to per-message execution
     busy_s: float = 0.0
     window_start: float = field(default_factory=time.monotonic)
 
@@ -45,7 +64,9 @@ class ResultDeliver:
     """Delivery to next-hop inboxes over the unified transport Router:
     round-robin across next-stage instances (§4.5), bounded retries on a
     full ring then drop (§9), cached producers invalidated whenever the NM
-    reassigns a target away from a next-hop set."""
+    reassigns a target away from a next-hop set.  ``deliver_many`` keeps a
+    microbatch together: one round-robin pick, one doorbell-batched append,
+    so the batch lands intact in the next stage's coalescer."""
 
     def __init__(self, fabric: RdmaFabric, name: str, nm: NodeManager,
                  database: Optional[ReplicatedDatabase],
@@ -56,21 +77,39 @@ class ResultDeliver:
         self.database = database
         self.router = Router(name, buffers if buffers is not None else {}, nm=nm)
 
-    def deliver(self, msg: WorkflowMessage, stage: str,
-                buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> bool:
+    def _sync_buffers(self, buffers: Optional[Dict[str, DoubleRingBuffer]]) -> None:
         if buffers is not None and buffers is not self.router.buffers:
             self.router.buffers = buffers
-        hops = self.nm.next_hops(msg.app_id, stage)
+
+    def deliver(self, msg: WorkflowMessage, stage: str,
+                buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> bool:
+        return self.deliver_many([msg], stage, buffers) == 1
+
+    def deliver_many(self, msgs: List[WorkflowMessage], stage: str,
+                     buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> int:
+        """Deliver a batch's per-request slices; returns how many landed.
+        All messages must belong to one app (the scheduler's bucket key
+        guarantees it).  Singletons keep the per-message round-robin
+        ``send``; real batches ride one doorbell-batched ``send_many`` to
+        a single target so they re-coalesce downstream."""
+        if not msgs:
+            return 0
+        self._sync_buffers(buffers)
+        app_id = msgs[0].app_id
+        hops = self.nm.next_hops(app_id, stage)
         if not hops:
-            return False
-        wf = self.nm.workflows[msg.app_id]
+            return 0
+        wf = self.nm.workflows[app_id]
         if stage == wf.stage_names()[-1]:
             # final stage -> durable (transient) storage, retrievable by UID
-            if self.database is not None:
-                self.database.store(msg.uid_hex, msg.payload)
-                return True
-            return False
-        return self.router.send(hops, msg, rr_key=msg.app_id) is not None
+            if self.database is None:
+                return 0
+            for m in msgs:
+                self.database.store(m.uid_hex, m.payload)
+            return len(msgs)
+        if len(msgs) == 1:
+            return 1 if self.router.send(hops, msgs[0], rr_key=app_id) is not None else 0
+        return self.router.send_many(hops, msgs, rr_key=app_id)
 
     def transport_stats(self) -> ChannelStats:
         return self.router.stats()
@@ -89,6 +128,9 @@ class WorkflowInstance:
         ring_slots: int = 256,
         ring_bytes: int = 1 << 22,
         poll_interval_s: float = 0.0005,
+        max_batch: int = 1,
+        max_wait_s: float = 0.002,
+        pad_to_full: bool = False,
         buffers: Optional[Dict[str, DoubleRingBuffer]] = None,
     ):
         self.name = name
@@ -97,6 +139,13 @@ class WorkflowInstance:
         self.n_workers = n_workers
         self.mode = mode
         self.poll_interval_s = poll_interval_s
+        self.max_batch = max_batch
+        self.max_wait_s = max_wait_s
+        # Pad deadline-flushed partial batches up to max_batch (repeating
+        # the tail request) so a jitted stage fn only ever sees one batch
+        # shape per bucket — a 3-request flush would otherwise trigger a
+        # fresh XLA compile worth seconds on its first appearance.
+        self.pad_to_full = pad_to_full
         self.inbox = DoubleRingBuffer(
             fabric, f"{name}.inbox", n_slots=ring_slots, buf_size=ring_bytes,
             consumer_id=name,
@@ -105,12 +154,11 @@ class WorkflowInstance:
         self.buffers[name] = self.inbox
         self.rd = ResultDeliver(fabric, name, nm, database, self.buffers)
         self.stats = InstanceStats()
-        self._queue: "queue.Queue[WorkflowMessage]" = queue.Queue()
+        self._queue: "queue.Queue[List[WorkflowMessage]]" = queue.Queue()
         self._stop = threading.Event()
         self._threads: List[threading.Thread] = []
         self._stage: Optional[str] = None
         self._version = -1
-        self._cm_lock = threading.Lock()
         nm.register_instance(name, role="workflow", location=f"{name}.inbox")
 
     # ------------------------------------------------------------ lifecycle
@@ -156,11 +204,26 @@ class WorkflowInstance:
             self._stop.wait(self.poll_interval_s * 4)
 
     # ----------------------------------------------------------- scheduler
+    def _dispatch(self, batch: List[WorkflowMessage]) -> None:
+        if self.mode == "CM":
+            self._run_cm(batch)  # broadcast: all workers on one batch
+        else:
+            self._queue.put(batch)  # IM: shared queue, workers pull
+
     def _scheduler_loop(self) -> None:
+        coalescer = Coalescer(max_batch=self.max_batch, max_wait_s=self.max_wait_s)
         while not self._stop.is_set():
             item = self.inbox.poll()
             if item is None:
-                self._stop.wait(self.poll_interval_s)
+                for _, batch in coalescer.pop_expired():
+                    self._dispatch(batch)
+                deadline = coalescer.next_deadline()
+                if deadline is None:
+                    self._stop.wait(self.poll_interval_s)
+                else:
+                    self._stop.wait(
+                        min(self.poll_interval_s,
+                            max(deadline - time.monotonic(), 0.0)))
                 continue
             if isinstance(item, type(CORRUPT)):
                 self.stats.dropped += 1  # checksum-failed entry, no retry (§9)
@@ -170,10 +233,24 @@ class WorkflowInstance:
             except Exception:
                 self.stats.dropped += 1
                 continue
-            if self.mode == "CM":
-                self._run_cm(msg)  # broadcast: all workers on one request
-            else:
-                self._queue.put(msg)  # IM: shared queue, workers pull
+            if self.max_batch <= 1:
+                self._dispatch([msg])
+                continue
+            try:
+                key = (msg.app_id, msg.stage, bucket_key(msg.payload))
+            except TypeError:
+                self._dispatch([msg])  # unbatchable payload: run solo
+                continue
+            full = coalescer.add(key, msg)
+            if full is not None:
+                self._dispatch(full)
+            for _, batch in coalescer.pop_expired():
+                self._dispatch(batch)
+        # Shutdown: residual partial buckets are dropped with accounting —
+        # workers are exiting on the same stop event, so dispatching them
+        # would only lose them silently (§9: drops are fine, silent isn't).
+        for _, batch in coalescer.flush_all():
+            self.stats.dropped += len(batch)
 
     # ------------------------------------------------------------- workers
     def _stage_callable(self, msg: WorkflowMessage) -> Optional[Callable]:
@@ -184,41 +261,95 @@ class WorkflowInstance:
         except KeyError:
             return None
 
+    def _stack_batch(self, msgs: List[WorkflowMessage]):
+        """Shared singleton/stacking policy for IM and CM: returns
+        ``(payload, sizes)`` where sizes is None for the legacy raw-payload
+        singleton path (so non-batch-aware stage fns keep working at
+        max_batch=1).  ``pad_to_full`` forces even singletons through the
+        stacked path so a bucket only ever traces one jit shape."""
+        if len(msgs) == 1 and not (self.pad_to_full and self.max_batch > 1):
+            return msgs[0].payload, None
+        pad = self.max_batch if self.pad_to_full else None
+        return stack_payloads([m.payload for m in msgs], pad_to=pad)
+
+    def _run_batch(self, fn: Callable, msgs: List[WorkflowMessage]) -> List[Any]:
+        """One stage-fn invocation for a (possibly singleton) batch.  If
+        the stacked call fails (stack/unstack infrastructure error, or a
+        stage fn that can't take this batch), each message retries solo —
+        counted in ``solo_fallbacks`` so a silently-degraded "batched"
+        deployment is visible in the stats.  Per-message failures yield
+        the _DROP sentinel."""
+        sizes = None
+        try:
+            payload, sizes = self._stack_batch(msgs)
+            if sizes is None:
+                return [fn(payload)]
+            return unstack_payload(fn(payload), sizes)
+        except Exception:
+            if sizes is None and len(msgs) == 1:
+                return [_DROP]  # the raw call itself failed; a retry is identical
+        self.stats.solo_fallbacks += 1
+        results = []
+        for m in msgs:  # solo fallback
+            try:
+                results.append(fn(m.payload))
+            except Exception:
+                results.append(_DROP)
+        return results
+
     def _worker_loop(self, widx: int) -> None:
         while not self._stop.is_set():
             try:
-                msg = self._queue.get(timeout=self.poll_interval_s)
+                msgs = self._queue.get(timeout=self.poll_interval_s)
             except queue.Empty:
                 continue
-            fn = self._stage_callable(msg)
+            fn = self._stage_callable(msgs[0])
             if fn is None:
-                self.stats.dropped += 1
+                self.stats.dropped += len(msgs)
                 continue
             t0 = time.monotonic()
-            try:
-                result = fn(msg.payload)
-            except Exception:
-                self.stats.dropped += 1
-                continue
+            results = self._run_batch(fn, msgs)
             self.stats.busy_s += time.monotonic() - t0
-            self.stats.processed += 1
-            if self.rd.deliver(msg.next_stage(result), self._stage, self.buffers):
-                self.stats.delivered += 1
-            else:
-                self.stats.dropped += 1
+            self.stats.batches += 1
+            self._deliver_results(msgs, results)
 
-    def _run_cm(self, msg: WorkflowMessage) -> None:
-        """Collaboration Mode: every worker gets the same input (think TP/PP
-        shards); partials are aggregated into one output before delivery."""
-        fn = self._stage_callable(msg)
+    def _deliver_results(self, msgs: List[WorkflowMessage],
+                         results: List[Any]) -> None:
+        self.stats.dropped += sum(1 for r in results if r is _DROP)
+        pairs = [(m, r) for m, r in zip(msgs, results) if r is not _DROP]
+        self.stats.processed += len(pairs)
+        if not pairs:
+            return
+        out = [m.next_stage(r) for m, r in pairs]
+        if len(out) == 1:
+            ok = 1 if self.rd.deliver(out[0], self._stage, self.buffers) else 0
+        else:
+            ok = self.rd.deliver_many(out, self._stage, self.buffers)
+        self.stats.delivered += ok
+        self.stats.dropped += len(out) - ok
+
+    def _run_cm(self, msgs: List[WorkflowMessage]) -> None:
+        """Collaboration Mode: every worker gets the same (stacked) input
+        (think TP/PP shards); partials are aggregated into one output, then
+        split back into per-request slices for delivery."""
+        fn = self._stage_callable(msgs[0])
         if fn is None:
-            self.stats.dropped += 1
+            self.stats.dropped += len(msgs)
+            return
+        try:
+            payload, sizes = self._stack_batch(msgs)
+        except Exception:
+            self.stats.dropped += len(msgs)
             return
         partials: List[Any] = [None] * self.n_workers
+        errors: List[bool] = [False] * self.n_workers
         t0 = time.monotonic()
 
         def run(i):
-            partials[i] = fn(msg.payload, worker_idx=i, n_workers=self.n_workers)
+            try:
+                partials[i] = fn(payload, worker_idx=i, n_workers=self.n_workers)
+            except Exception:
+                errors[i] = True
 
         threads = [threading.Thread(target=run, args=(i,)) for i in range(self.n_workers)]
         for t in threads:
@@ -226,19 +357,39 @@ class WorkflowInstance:
         for t in threads:
             t.join()
         self.stats.busy_s += (time.monotonic() - t0) * self.n_workers
-        self.stats.processed += 1
-        combined = _combine_partials(partials)
-        if self.rd.deliver(msg.next_stage(combined), self._stage, self.buffers):
-            self.stats.delivered += 1
-        else:
-            self.stats.dropped += 1
+        if any(errors):
+            self.stats.dropped += len(msgs)
+            return
+        self.stats.batches += 1
+        try:
+            combined = _combine_partials(partials)
+            results = [combined] if sizes is None else unstack_payload(combined, sizes)
+        except Exception:
+            # aggregation/split failed (shards disagree on shape/keys):
+            # account the drop rather than killing the scheduler thread —
+            # _run_cm executes inline in _scheduler_loop.
+            self.stats.dropped += len(msgs)
+            return
+        self._deliver_results(msgs, results)
 
 
 def _combine_partials(partials: List[Any]):
-    """Default CM aggregation: concatenate arrays, else first partial."""
+    """Default CM aggregation: concatenate array leaves over the shard
+    (last) axis, recursing through dict/list/tuple pytrees; non-array
+    leaves (scalars, strings) must agree across workers and pass through.
+    The batch axis (axis 0) is untouched, so a stacked microbatch stays
+    per-request splittable after aggregation."""
     import numpy as np
 
-    arrays = [p for p in partials if isinstance(p, np.ndarray)]
-    if len(arrays) == len(partials) and arrays:
-        return np.concatenate(arrays, axis=-1)
-    return partials[0]
+    if len(partials) == 1:
+        return partials[0]
+    head = partials[0]
+    if isinstance(head, np.ndarray) and head.ndim >= 1:
+        return np.concatenate(partials, axis=-1)
+    if isinstance(head, dict):
+        return {k: _combine_partials([p[k] for p in partials]) for k in head}
+    if isinstance(head, (list, tuple)):
+        return type(head)(
+            _combine_partials([p[i] for p in partials]) for i in range(len(head))
+        )
+    return head

@@ -4,9 +4,17 @@
   * ring_buffer     — deadlock-free multi-producer double-ring buffer (§6.1)
   * messaging       — workflow message codec, arbitrary dynamic payloads (§4.1)
   * transport       — unified Channel/Router data plane over the rings
+  * batching        — cross-request microbatching (stack/unstack, buckets)
   * pipeline_planner— Theorem-1 rate matching (§5)
   * request_monitor — proxy fast-reject admission control (§3.2, §5)
 """
+from repro.core.batching import (
+    Coalescer,
+    PerRequest,
+    bucket_key,
+    stack_payloads,
+    unstack_payload,
+)
 from repro.core.rdma import CostModel, FabricStats, MemoryRegion, RdmaFabric, SimulatedCrash, TcpCostModel
 from repro.core.ring_buffer import CORRUPT, AppendOp, Corrupt, DoubleRingBuffer, RingProducer
 from repro.core.messaging import HEADER_BYTES, WorkflowMessage
@@ -25,6 +33,7 @@ __all__ = [
     "CORRUPT",
     "Channel",
     "ChannelStats",
+    "Coalescer",
     "Corrupt",
     "CostModel",
     "Router",
@@ -32,13 +41,17 @@ __all__ = [
     "FabricStats",
     "HEADER_BYTES",
     "MemoryRegion",
+    "PerRequest",
     "RdmaFabric",
     "RequestMonitor",
     "RingProducer",
     "SimulatedCrash",
     "TcpCostModel",
     "WorkflowMessage",
+    "bucket_key",
     "offered_rate",
+    "stack_payloads",
+    "unstack_payload",
     "plan_chain",
     "required_instances",
     "simulate_pipeline",

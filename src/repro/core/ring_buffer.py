@@ -92,6 +92,7 @@ class RingBufferStats:
     aborts_cas: int = 0
     lock_takeovers: int = 0
     case7_recoveries: int = 0
+    tail_fastforwards: int = 0
 
 
 class DoubleRingBuffer:
@@ -277,6 +278,17 @@ class AppendOp:
         rb, f, me = self.rb, self.rb.fabric, self.p.client
         while True:
             tb, ts, hb, hs = rb.read_header(me)
+            if hs > ts:
+                # Stale tail: a previous lock holder committed entries (WL)
+                # that the consumer already drained via their busy bits, but
+                # its doorbell (UH) never landed — takeover mid-batch — or
+                # will land late and rewind the header.  Appending below the
+                # consumer head would strand the entry beyond consumption
+                # forever; fast-forward to the head, which is always a safe
+                # lower bound for the true tail (everything before it was
+                # committed AND consumed).
+                tb, ts = hb, hs
+                rb.stats.tail_fastforwards += 1
             if ts - hs >= rb.n_slots:
                 self.p._release(self.token)
                 rb.stats.aborts_full += 1
@@ -348,9 +360,18 @@ class RingProducer:
         rb: DoubleRingBuffer,
         producer_id: int,
         *,
-        lock_timeout_s: float = 2e-3,
+        lock_timeout_s: float = 0.1,
         client: Optional[str] = None,
     ):
+        # lock_timeout_s guards against CRASHED lock holders (§6.1 TL).  It
+        # must comfortably exceed how long a *live* producer can stall while
+        # holding the lock: a doorbell-batched append_many writes + CRCs a
+        # whole batch under the lock, and on a loaded box (GIL, XLA worker
+        # threads) that routinely exceeds the seed's 2 ms — takeover of a
+        # live producer triggers the Case-2 same-size clobber, which passes
+        # the checksum and silently replaces one message with a duplicate
+        # of another.  100 ms keeps crash recovery prompt while making
+        # live-producer takeover practically impossible in-process.
         self.rb = rb
         self.producer_id = producer_id
         self.lock_timeout_s = lock_timeout_s
@@ -430,6 +451,8 @@ class RingProducer:
             return 0
         token = self._new_token()
         self._acquire(token)
+        # Stale-tail fast-forward (hs > ts) is handled at the top of each
+        # entry's scan loop below — see AppendOp._s_gh for the full story.
         tb, ts, hb, hs = rb.read_header(me)
         appended = 0
         full = False
@@ -437,6 +460,12 @@ class RingProducer:
             # Case-7 scan at the current tail slot (same recovery as _s_gh).
             refreshed = False
             while True:
+                if hs > ts:
+                    # consumer drained past our (stale) tail view — e.g. we
+                    # were taken over mid-batch and the taker's entries were
+                    # already consumed; never append behind the head.
+                    tb, ts = hb, hs
+                    rb.stats.tail_fastforwards += 1
                 if ts - hs >= rb.n_slots:
                     if refreshed:
                         full = True
@@ -457,6 +486,10 @@ class RingProducer:
             if new_tail - hb > rb.buf_size:
                 if not refreshed:
                     _, _, hb, hs = rb.read_header(me)
+                    if hs > ts:
+                        tb, ts = hb, hs
+                        rb.stats.tail_fastforwards += 1
+                        write_pos, new_tail = _advance(tb, size, rb.buf_size)
                 if new_tail - hb > rb.buf_size:
                     full = True
                     break

@@ -5,7 +5,7 @@ NodeManager keeps scaling (Figure 10).
 """
 from __future__ import annotations
 
-from typing import Any, Dict
+from typing import Any, Dict, Optional
 
 import jax
 import jax.numpy as jnp
@@ -108,16 +108,21 @@ def dit_forward(params: Tree, noisy_tokens: jax.Array, t: jax.Array,
 
 
 def ddim_sample(params: Tree, z_init_tokens: jax.Array, text_emb: jax.Array,
-                cfg: WanPipelineConfig, rng: jax.Array,
-                n_steps: int = 0) -> jax.Array:
+                cfg: WanPipelineConfig, rng: Optional[jax.Array],
+                n_steps: int = 0,
+                noise: Optional[jax.Array] = None) -> jax.Array:
     """Deterministic DDIM from pure noise conditioned on (image-latent
-    prepended) tokens + text.  Returns denoised latent tokens."""
+    prepended) tokens + text.  Returns denoised latent tokens.  Pass
+    ``noise`` (e.g. drawn per sample for a microbatch) to skip the
+    whole-batch draw from ``rng``."""
     steps = n_steps or cfg.diffusion_steps
     betas = jnp.linspace(1e-4, 0.02, 1000)
     alphas = jnp.cumprod(1.0 - betas)
     ts = jnp.linspace(999, 0, steps).astype(jnp.int32)
 
-    x = jax.random.normal(rng, z_init_tokens.shape, z_init_tokens.dtype)
+    if noise is None:
+        noise = jax.random.normal(rng, z_init_tokens.shape, z_init_tokens.dtype)
+    x = noise
 
     def step(x, i):
         t = ts[i]

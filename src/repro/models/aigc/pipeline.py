@@ -4,12 +4,19 @@
 cluster layer runs on workflow instances; payloads are numpy pytrees moving
 over the RDMA fabric as WorkflowMessages — the dynamic-size, arbitrary-type
 case NCCL can't serve (§6 L1/L2).
+
+Every stage is **batch-aware**: the cluster layer's microbatching scheduler
+(repro.core.batching) may stack N requests along axis 0 before invoking a
+stage, so each fn accepts ``seed`` as a scalar (one request) or a [N]
+vector (one per stacked request) and runs one jitted call for the whole
+batch.  All randomness is derived per request from its own seed — request
+i's output is independent of who it was batched with.
 """
 from __future__ import annotations
 
 import time
 from dataclasses import dataclass, field
-from typing import Any, Callable, Dict, Tuple
+from typing import Any, Callable, Dict
 
 import jax
 import jax.numpy as jnp
@@ -24,7 +31,7 @@ from repro.models.param import init_tree
 
 @dataclass
 class WanI2VPipeline:
-    """All four stage models + jitted entry points."""
+    """All four stage models + jitted entry points (batched over requests)."""
 
     cfg: WanPipelineConfig = field(default_factory=lambda: SMALL)
     seed: int = 0
@@ -42,13 +49,18 @@ class WanI2VPipeline:
             return text_mod.encode_text(self.text_params, tokens, cfg)
 
         @jax.jit
-        def vae_encode(image, rng):
-            z, _, _ = vae_mod.encode(self.vae_params, image, cfg, rng)
+        def vae_encode(image, rngs):
+            """image [B,H,W,3], rngs [B,2]: per-sample reparam noise."""
+            z, _, _ = vae_mod.encode_batched(self.vae_params, image, cfg, rngs)
             return z
 
         @jax.jit
-        def diffuse(z_img_tokens, text_emb, rng):
-            return dit_mod.ddim_sample(self.dit_params, z_img_tokens, text_emb, cfg, rng)
+        def diffuse(z_img_tokens, text_emb, rngs):
+            """z_img_tokens [B,T,D], rngs [B,2]: per-sample init noise."""
+            noise = jax.vmap(lambda r: jax.random.normal(
+                r, z_img_tokens.shape[1:], z_img_tokens.dtype))(rngs)
+            return dit_mod.ddim_sample(self.dit_params, z_img_tokens, text_emb,
+                                       cfg, None, noise=noise)
 
         @jax.jit
         def vae_decode(latent_frames):
@@ -57,29 +69,46 @@ class WanI2VPipeline:
             frames = vae_mod.decode(self.vae_params, flat, cfg)
             return frames.reshape((b, f) + frames.shape[1:])
 
+        # [B] seeds -> [B, 2, 2]: row b = split(PRNGKey(seed_b)); index 0
+        # keys the VAE reparam draw, index 1 the DDIM init noise — the same
+        # derivation the per-request path has always used.
+        self._split_seeds = jax.jit(
+            jax.vmap(lambda s: jax.random.split(jax.random.PRNGKey(s))))
+
         self.encode_text = encode_text
         self.vae_encode = vae_encode
         self.diffuse = diffuse
         self.vae_decode = vae_decode
 
+    def request_keys(self, seeds: Any, batch: int) -> jax.Array:
+        """Per-request PRNG keys [batch, 2, 2] from a scalar seed or a [N]
+        seed vector.  A scalar seed with batch > 1 (the monolithic baseline
+        path) fans out to seed+i per row so samples stay distinct."""
+        s = np.asarray(seeds).reshape(-1).astype(np.int64)
+        if s.size == 1 and batch > 1:
+            s = s[0] + np.arange(batch, dtype=np.int64)
+        if s.size != batch:
+            raise ValueError(f"{s.size} seeds for batch {batch}")
+        return self._split_seeds(jnp.asarray(s, jnp.uint32))
+
     # ------------------------------------------------ monolithic reference
     def generate(self, tokens: np.ndarray, image: np.ndarray, seed: int = 0):
         """End-to-end in one process (the paper's monolithic baseline)."""
         cfg = self.cfg
-        rng = jax.random.PRNGKey(seed)
-        r1, r2 = jax.random.split(rng)
+        keys = self.request_keys(seed, tokens.shape[0])
         temb = self.encode_text(jnp.asarray(tokens))
-        z_img = self.vae_encode(jnp.asarray(image), r1)  # [B,h,w,C]
+        z_img = self.vae_encode(jnp.asarray(image), keys[:, 0])  # [B,h,w,C]
         z_tokens = dit_mod.patchify(
             jnp.repeat(z_img[:, None], cfg.num_frames, axis=1), cfg
         )
-        lat = self.diffuse(z_tokens, temb, r2)
+        lat = self.diffuse(z_tokens, temb, keys[:, 1])
         frames = self.vae_decode(dit_mod.unpatchify(lat, cfg))
         return np.asarray(frames)
 
 
 def build_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
-    """Stage callables for WorkflowInstances.  Payload schema:
+    """Stage callables for WorkflowInstances.  Payload schema (every array
+    may carry N stacked requests along axis 0; ``seed`` is scalar or [N]):
        client -> text_encode: {tokens, image, seed}
        -> vae_encode: {text_emb, image, seed}
        -> diffusion:  {text_emb, z_tokens, seed}
@@ -93,8 +122,9 @@ def build_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
         return {"text_emb": np.asarray(temb), "image": p["image"], "seed": p["seed"]}
 
     def stage_vae_encode(p):
-        rng = jax.random.split(jax.random.PRNGKey(int(p["seed"])))[0]
-        z = pipe.vae_encode(jnp.asarray(p["image"]), rng)
+        image = np.asarray(p["image"])
+        keys = pipe.request_keys(p["seed"], image.shape[0])
+        z = pipe.vae_encode(jnp.asarray(image), keys[:, 0])
         z_tokens = dit_mod.patchify(
             jnp.repeat(z[:, None], cfg.num_frames, axis=1), cfg
         )
@@ -102,8 +132,10 @@ def build_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
                 "seed": p["seed"]}
 
     def stage_diffusion(p):
-        rng = jax.random.split(jax.random.PRNGKey(int(p["seed"])))[1]
-        lat = pipe.diffuse(jnp.asarray(p["z_tokens"]), jnp.asarray(p["text_emb"]), rng)
+        z_tokens = np.asarray(p["z_tokens"])
+        keys = pipe.request_keys(p["seed"], z_tokens.shape[0])
+        lat = pipe.diffuse(jnp.asarray(z_tokens), jnp.asarray(p["text_emb"]),
+                           keys[:, 1])
         return {"latents": np.asarray(lat)}
 
     def stage_vae_decode(p):

@@ -48,18 +48,36 @@ def _conv(x, w, stride: int = 1):
     )
 
 
-def encode(params: Tree, frames: jax.Array, cfg: WanPipelineConfig,
-           rng: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
-    """frames: [B,H,W,3] -> (latent sample, mu, logvar) [B,h,w,C_lat]."""
+def moments(params: Tree, frames: jax.Array,
+            cfg: WanPipelineConfig) -> Tuple[jax.Array, jax.Array]:
+    """Deterministic encoder pass: frames [B,H,W,3] -> (mu, logvar)."""
     x = frames
     for i in range(cfg.vae_downs):
         x = jax.nn.silu(_conv(x, params["encoder"][f"down{i}_a"], stride=2))
         x = x + jax.nn.silu(_conv(x, params["encoder"][f"down{i}_b"]))
     stats = _conv(x, params["encoder"]["to_latent"])
     mu, logvar = jnp.split(stats, 2, axis=-1)
-    logvar = jnp.clip(logvar, -10.0, 10.0)
+    return mu, jnp.clip(logvar, -10.0, 10.0)
+
+
+def encode(params: Tree, frames: jax.Array, cfg: WanPipelineConfig,
+           rng: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """frames: [B,H,W,3] -> (latent sample, mu, logvar) [B,h,w,C_lat]."""
+    mu, logvar = moments(params, frames, cfg)
     z = mu + jnp.exp(0.5 * logvar) * jax.random.normal(rng, mu.shape, mu.dtype)
     return z, mu, logvar
+
+
+def encode_batched(params: Tree, frames: jax.Array, cfg: WanPipelineConfig,
+                   rngs: jax.Array) -> Tuple[jax.Array, jax.Array, jax.Array]:
+    """Microbatched encode: one conv pass over the stacked batch, but the
+    reparameterization noise is drawn per sample from ``rngs`` [B, 2] so
+    row i equals ``encode(frames[i:i+1], rng=rngs[i])`` — stacking requests
+    never changes a request's latent sample."""
+    mu, logvar = moments(params, frames, cfg)
+    noise = jax.vmap(
+        lambda k: jax.random.normal(k, mu.shape[1:], mu.dtype))(rngs)
+    return mu + jnp.exp(0.5 * logvar) * noise, mu, logvar
 
 
 def _upsample2(x):

@@ -1,15 +1,27 @@
-"""Model-level serving engine: batched prefill -> decode generation loop
+"""Model-level serving engine: batched prefill -> on-device decode loop
 for any assigned architecture (the per-stage compute a TaskWorker runs when
 a workflow stage is an LM rather than a diffusion model).
 
 The engine is deliberately synchronous-batch (the paper's Collaboration
-Mode): one jitted prefill + one jitted decode step, decode iterated from a
-preallocated max-length cache.
+Mode): ONE jitted prefill over the whole prompt, then the entire decode
+generation as ONE jitted ``lax.scan`` — a single host sync per generation
+to fetch the sampled tokens, instead of the seed's one blocking dispatch
+per prompt token plus one per decode step.
+
+The prefill cache covers exactly the prompt length; decode needs the
+preallocated ``max_len`` layout, so the prefill wrapper zero-pads every
+cache leaf out to the ``abstract_cache(cfg, B, max_len)`` shape inside the
+same jitted call.  Padding is semantics-preserving for every family:
+full-length KV caches are masked by ``cur_index``; ring (sliding-window)
+caches hold position ``t`` at slot ``t % w`` and a prompt shorter than the
+window lays tokens out at ``t`` identically before and after padding;
+recurrent states (rwkv/mamba) are already O(1)-sized and pass through.
 """
 from __future__ import annotations
 
 import dataclasses
-from typing import Any, Dict, List, Optional
+import functools
+from typing import Dict
 
 import jax
 import jax.numpy as jnp
@@ -36,10 +48,27 @@ class ServingEngine:
             jax.random.PRNGKey(seed), cfg)
 
         cfgs = cfg
+        max_len_s = max_len
 
         @jax.jit
         def prefill_fn(params, batch):
-            return registry.prefill(params, batch, cfgs, dropless=True)
+            logits, cache = registry.prefill(params, batch, cfgs, dropless=True)
+            b = batch["tokens"].shape[0]
+            spec = registry.abstract_cache(cfgs, b, max_len_s)
+
+            def pad(leaf, s):
+                target = tuple(s.shape)
+                if tuple(leaf.shape) == target:
+                    return leaf
+                if any(c > t for c, t in zip(leaf.shape, target)):
+                    raise ValueError(
+                        f"prefill cache leaf {leaf.shape} exceeds decode "
+                        f"layout {target}")
+                return jax.lax.pad(leaf, jnp.zeros((), leaf.dtype),
+                                   [(0, t - c, 0)
+                                    for c, t in zip(leaf.shape, target)])
+
+            return logits, jax.tree.map(pad, cache, spec)
 
         @jax.jit
         def decode_fn(params, cache, tokens, cur_index):
@@ -47,8 +76,34 @@ class ServingEngine:
                 params, cache, {"tokens": tokens, "cur_index": cur_index},
                 cfgs, dropless=True)
 
+        @functools.partial(jax.jit, static_argnames=("steps", "temperature"))
+        def decode_loop_fn(params, cache, logits, start, rng, *, steps,
+                           temperature):
+            """The whole generation as one on-device scan: sample from the
+            carried logits, run one decode step, repeat.  Token i lands at
+            position start+i; one host sync fetches the [B, steps] block."""
+            keys = jax.random.split(rng, steps)
+
+            def body(carry, key):
+                logits, cache, idx = carry
+                if temperature > 0:
+                    tok = jax.random.categorical(
+                        key, logits / temperature, axis=-1)
+                else:
+                    tok = jnp.argmax(logits, axis=-1)
+                tok = jnp.minimum(tok, cfgs.vocab_size - 1).astype(jnp.int32)
+                logits, cache = registry.decode_step(
+                    params, cache, {"tokens": tok, "cur_index": idx},
+                    cfgs, dropless=True)
+                return (logits, cache, idx + 1), tok
+
+            (logits, cache, _), toks = jax.lax.scan(
+                body, (logits, cache, jnp.int32(start)), keys)
+            return jnp.transpose(toks), logits  # [B, steps]
+
         self._prefill = prefill_fn
         self._decode = decode_fn
+        self._decode_loop = decode_loop_fn
 
     def _fresh_cache(self, batch: int):
         spec = registry.abstract_cache(self.cfg, batch, self.max_len)
@@ -63,11 +118,34 @@ class ServingEngine:
             cache = make_decode_cache(self.params, frames, self.cfg, self.max_len)
         return cache
 
+    def _prefill_batch(self, prompts: np.ndarray) -> Dict[str, jax.Array]:
+        batch: Dict[str, jax.Array] = {"tokens": jnp.asarray(prompts)}
+        if self.cfg.family == "audio":
+            batch["frames"] = jnp.zeros(
+                (prompts.shape[0], self.cfg.frontend_tokens, self.cfg.d_model),
+                jnp.dtype(self.cfg.dtype))
+        return batch
+
     def generate(self, prompts: np.ndarray, *, steps: int = 16,
                  temperature: float = 0.0, seed: int = 0) -> GenerationResult:
-        """prompts: [B, P] int32; teacher-forces the prompt through the
-        decode path (uniform across families incl. recurrent), then samples
-        ``steps`` new tokens greedily (or with temperature)."""
+        """prompts: [B, P] int32.  One jitted prefill consumes the prompt,
+        one jitted scan generates ``steps`` tokens greedily (or with
+        temperature); the only host sync is fetching the finished block."""
+        b, p = prompts.shape
+        assert p + steps <= self.max_len
+        logits, cache = self._prefill(self.params, self._prefill_batch(prompts))
+        toks, _ = self._decode_loop(
+            self.params, cache, logits, jnp.int32(p), jax.random.PRNGKey(seed),
+            steps=steps, temperature=float(temperature))
+        tokens = np.concatenate([prompts, np.asarray(toks)], axis=1)
+        return GenerationResult(tokens=tokens, prompt_len=p, steps=steps)
+
+    def generate_reference(self, prompts: np.ndarray, *, steps: int = 16,
+                           temperature: float = 0.0,
+                           seed: int = 0) -> GenerationResult:
+        """The seed's token-at-a-time loop (teacher-forced prompt, one host
+        sync per decode step).  Kept as the parity/benchmark baseline for
+        the scan path — not a serving path."""
         b, p = prompts.shape
         assert p + steps <= self.max_len
         cache = self._fresh_cache(b)
@@ -78,7 +156,6 @@ class ServingEngine:
             logits, cache = self._decode(self.params, cache,
                                          jnp.asarray(prompts[:, t]), jnp.int32(t))
         out = [prompts]
-        cur = None
         for i in range(steps):
             if temperature > 0:
                 rng, k = jax.random.split(rng)

@@ -1,0 +1,388 @@
+"""Cross-request microbatching: bucket keys, stack/unstack round trips,
+deadline coalescing, and the cluster integration — per-request routing
+after unstack, partial-batch flush on max_wait_s, one jit trace per
+bucket, and batched Collaboration-Mode aggregation (tree-mapped
+``_combine_partials``).
+"""
+from __future__ import annotations
+
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
+from repro.cluster.instance import _combine_partials
+from repro.core.batching import (
+    Coalescer,
+    PerRequest,
+    bucket_key,
+    request_size,
+    stack_payloads,
+    unstack_payload,
+)
+
+
+# ------------------------------------------------------------- bucket keys
+def test_bucket_key_groups_same_dtype_and_trailing_shape():
+    a = {"x": np.zeros((1, 8), np.float32), "seed": 3}
+    b = {"x": np.ones((4, 8), np.float32), "seed": 9}   # leading dim differs: OK
+    assert bucket_key(a) == bucket_key(b)
+
+
+@pytest.mark.parametrize("other", [
+    {"x": np.zeros((1, 9), np.float32), "seed": 0},     # trailing shape
+    {"x": np.zeros((1, 8), np.float64), "seed": 0},     # dtype
+    {"x": np.zeros((1, 8), np.float32)},                # structure
+    {"x": np.zeros((1, 8), np.float32), "seed": 0.5},   # scalar dtype
+])
+def test_bucket_key_separates(other):
+    base = {"x": np.zeros((1, 8), np.float32), "seed": 0}
+    assert bucket_key(base) != bucket_key(other)
+
+
+def test_bucket_key_nested_and_scalarlike():
+    p = {"a": [np.zeros((2, 3)), "hi"], "b": None, "c": np.float32(1.0)}
+    q = {"a": [np.ones((5, 3)), "yo"], "b": None, "c": np.float32(2.0)}
+    assert bucket_key(p) == bucket_key(q)
+
+
+# ----------------------------------------------------------- stack/unstack
+def test_stack_unstack_roundtrip_pytree():
+    payloads = [
+        {"x": np.full((1, 4), i, np.float32), "meta": {"seed": i}, "tag": "t"}
+        for i in range(3)
+    ]
+    stacked, sizes = stack_payloads(payloads)
+    assert sizes == [1, 1, 1]
+    assert stacked["x"].shape == (3, 4)
+    np.testing.assert_array_equal(stacked["meta"]["seed"], [0, 1, 2])
+    assert stacked["tag"] == ["t", "t", "t"]
+    parts = unstack_payload(stacked, sizes)
+    for i, part in enumerate(parts):
+        np.testing.assert_array_equal(part["x"], payloads[i]["x"])
+        assert part["tag"] == "t"
+
+
+def test_stack_variable_request_sizes():
+    payloads = [np.zeros((2, 3)), np.ones((1, 3)), np.full((3, 3), 2.0)]
+    stacked, sizes = stack_payloads(payloads)
+    assert sizes == [2, 1, 3] and stacked.shape == (6, 3)
+    parts = unstack_payload(stacked, sizes)
+    assert [p.shape[0] for p in parts] == [2, 1, 3]
+    np.testing.assert_array_equal(parts[2], payloads[2])
+
+
+def test_multirow_requests_with_scalar_leaf_roundtrip():
+    """Requests contributing >1 row each plus a per-request scalar: array
+    leaves split by row counts, the stacked-scalar [N] vector by request
+    index — the two leading dims (4 rows vs 2 requests) must not clash."""
+    payloads = [{"x": np.full((2, 3), float(i)), "seed": 10 + i} for i in range(2)]
+    stacked, sizes = stack_payloads(payloads)
+    assert sizes == [2, 2] and stacked["x"].shape == (4, 3)
+    np.testing.assert_array_equal(stacked["seed"], [10, 11])
+    parts = unstack_payload(stacked, sizes)
+    for i, part in enumerate(parts):
+        np.testing.assert_array_equal(part["x"], payloads[i]["x"])
+        assert part["seed"] == 10 + i
+
+
+def test_list_container_leaves_roundtrip():
+    """A plain list is a pytree container: its elements stack/unstack
+    element-wise and never get misread as a per-request hand-out list —
+    even when the list length equals the request count."""
+    payloads = [{"embs": [np.full((1, 2), float(i)), np.full((1, 3), float(-i))]}
+                for i in range(2)]
+    stacked, sizes = stack_payloads(payloads)
+    assert stacked["embs"][0].shape == (2, 2) and stacked["embs"][1].shape == (2, 3)
+    parts = unstack_payload(stacked, sizes)
+    for i, part in enumerate(parts):
+        np.testing.assert_array_equal(part["embs"][0], payloads[i]["embs"][0])
+        np.testing.assert_array_equal(part["embs"][1], payloads[i]["embs"][1])
+
+
+def test_per_request_marker_hands_out_one_value_each():
+    stacked, sizes = stack_payloads([{"tag": "a"}, {"tag": "b"}])
+    assert isinstance(stacked["tag"], PerRequest)
+    parts = unstack_payload(stacked, sizes)
+    assert [p["tag"] for p in parts] == ["a", "b"]
+
+
+def test_stack_rejects_mixed_buckets():
+    with pytest.raises(ValueError):
+        stack_payloads([np.zeros((1, 3)), np.zeros((1, 4))])
+
+
+def test_request_size_inconsistent_leading_dims():
+    with pytest.raises(ValueError):
+        request_size({"a": np.zeros((2, 3)), "b": np.zeros((4, 3))})
+
+
+def test_pad_to_repeats_tail_and_unstack_drops_padding():
+    payloads = [{"x": np.full((1, 2), i, np.float32)} for i in range(3)]
+    stacked, sizes = stack_payloads(payloads, pad_to=8)
+    assert stacked["x"].shape == (8, 2) and sizes == [1, 1, 1]
+    np.testing.assert_array_equal(stacked["x"][3:], np.full((5, 2), 2, np.float32))
+    parts = unstack_payload(stacked, sizes)
+    assert len(parts) == 3
+    np.testing.assert_array_equal(parts[1]["x"], payloads[1]["x"])
+
+
+# -------------------------------------------------------------- coalescer
+def test_coalescer_flushes_on_max_batch():
+    c = Coalescer(max_batch=3, max_wait_s=100.0)
+    assert c.add("k", 1) is None
+    assert c.add("k", 2) is None
+    assert c.add("k", 3) == [1, 2, 3]
+    assert len(c) == 0
+
+
+def test_coalescer_partial_flush_on_deadline():
+    clock = [0.0]
+    c = Coalescer(max_batch=8, max_wait_s=0.01, clock=lambda: clock[0])
+    c.add("a", 1)
+    clock[0] += 0.005
+    c.add("b", 2)
+    assert c.pop_expired() == []          # nothing due yet
+    clock[0] += 0.006                     # 'a' (11ms) due, 'b' (6ms) not
+    assert c.pop_expired() == [("a", [1])]
+    assert c.next_deadline() == pytest.approx(0.015)
+    clock[0] += 0.005
+    assert c.pop_expired() == [("b", [2])]
+
+
+def test_coalescer_keys_do_not_mix():
+    c = Coalescer(max_batch=2, max_wait_s=100.0)
+    c.add("a", 1)
+    c.add("b", 10)
+    assert c.add("a", 2) == [1, 2]
+    assert c.flush_all() == [("b", [10])]
+
+
+# ------------------------------------------------------------ CM aggregate
+def test_combine_partials_tree_maps_dict_payloads():
+    partials = [
+        {"emb": np.full((2, 3), float(i)), "seed": 7, "aux": [np.full((2, 1), i)]}
+        for i in range(3)
+    ]
+    combined = _combine_partials(partials)
+    assert combined["emb"].shape == (2, 9)          # concat over shard axis
+    np.testing.assert_array_equal(combined["emb"][:, 3:6], np.ones((2, 3)))
+    assert combined["seed"] == 7
+    assert combined["aux"][0].shape == (2, 3)
+
+
+def test_combine_partials_arrays_keep_seed_behavior():
+    parts = [np.zeros((2, 2)), np.ones((2, 2))]
+    assert _combine_partials(parts).shape == (2, 4)
+
+
+# ------------------------------------------------- cluster integration: IM
+def _batched_double(p):
+    """Batch-aware stage fn: works on [N, 2] stacks."""
+    return {"x": np.asarray(p["x"]) * 2.0}
+
+
+def _batched_add_one(p):
+    return np.asarray(p["x"]) + 1.0
+
+
+def _make_batched_ws(name, *, max_batch, max_wait_s=0.01, trace_log=None,
+                     pad_to_full=False):
+    ws = WorkflowSet(name)
+
+    def mul(p):
+        if trace_log is not None:
+            trace_log.append(np.asarray(p["x"]).shape)
+        return _batched_double(p)
+
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=mul, exec_time_s=0.001),
+        StageSpec("add", fn=_batched_add_one, exec_time_s=0.001),
+    ]))
+    ws.add_instance("m0", stage="mul", max_batch=max_batch,
+                    max_wait_s=max_wait_s, pad_to_full=pad_to_full)
+    ws.add_instance("a0", stage="add", max_batch=max_batch,
+                    max_wait_s=max_wait_s, pad_to_full=pad_to_full)
+    ws.add_proxy("p0")
+    return ws
+
+
+def test_batched_results_route_to_correct_uids():
+    ws = _make_batched_ws("route", max_batch=4)
+    reqs = [{"x": np.full((1, 2), float(i), np.float32)} for i in range(8)]
+    with ws:
+        p = ws.proxies[0]
+        uids = p.submit_many(1, reqs)
+        assert len(uids) == 8
+        results = {u: p.wait_result(u, timeout_s=5) for u in uids}
+    for i, u in enumerate(uids):
+        np.testing.assert_allclose(results[u], np.full((1, 2), i * 2.0 + 1.0))
+    # 8 requests, max_batch=4 -> 2 stage invocations, not 8
+    assert ws.instances["route.m0"].stats.processed == 8
+    assert ws.instances["route.m0"].stats.batches <= 4
+
+
+def test_partial_batch_flushes_on_max_wait():
+    """3 requests never fill max_batch=8; the deadline must flush them."""
+    ws = _make_batched_ws("flush", max_batch=8, max_wait_s=0.02)
+    reqs = [{"x": np.full((1, 2), float(i), np.float32)} for i in range(3)]
+    with ws:
+        p = ws.proxies[0]
+        uids = p.submit_many(1, reqs)
+        for i, u in enumerate(uids):
+            np.testing.assert_allclose(
+                p.wait_result(u, timeout_s=5), np.full((1, 2), i * 2.0 + 1.0))
+    assert ws.instances["flush.m0"].stats.processed == 3
+
+
+def test_one_trace_per_bucket():
+    """A jitted stage sees ONE shape per bucket: 8 same-shape requests at
+    max_batch=4 -> one [4, 2] trace, reused by the second batch."""
+    import jax
+
+    traces = []
+
+    @jax.jit
+    def f(x):
+        traces.append(x.shape)  # runs only when (re)tracing
+        return x * 2.0
+
+    def jitted_mul(p):
+        return {"x": np.asarray(f(np.asarray(p["x"])))}
+
+    ws = WorkflowSet("trace")
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=jitted_mul, exec_time_s=0.001),
+    ]))
+    ws.add_instance("m0", stage="mul", max_batch=4, max_wait_s=10.0)
+    p = ws.add_proxy("p0")
+    reqs = [{"x": np.full((1, 2), float(i), np.float32)} for i in range(8)]
+    with ws:
+        uids = p.submit_many(1, reqs)
+        for u in uids:
+            p.wait_result(u, timeout_s=5)
+    assert traces == [(4, 2)]  # one trace, two executions
+
+
+def test_mixed_shapes_bucket_separately():
+    """Requests with different trailing shapes coalesce into different
+    buckets and each bucket runs as its own stacked invocation."""
+    seen = []
+
+    def probe(p):
+        x = np.asarray(p["x"])
+        seen.append(x.shape)
+        return {"x": x * 2.0}
+
+    ws = WorkflowSet("mix")
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=probe, exec_time_s=0.001),
+    ]))
+    ws.add_instance("m0", stage="mul", max_batch=2, max_wait_s=0.02)
+    p = ws.add_proxy("p0")
+    wide = [{"x": np.zeros((1, 4), np.float32)} for _ in range(2)]
+    narrow = [{"x": np.zeros((1, 2), np.float32)} for _ in range(2)]
+    with ws:
+        uids = [p.submit(1, r) for r in (wide[0], narrow[0], wide[1], narrow[1])]
+        for u in uids:
+            p.wait_result(u, timeout_s=5)
+    assert sorted(seen) == [(2, 2), (2, 4)]
+
+
+def test_pad_to_full_pins_batch_shape():
+    trace_log = []
+    ws = _make_batched_ws("pad", max_batch=4, max_wait_s=0.02,
+                          trace_log=trace_log, pad_to_full=True)
+    reqs = [{"x": np.full((1, 2), float(i), np.float32)} for i in range(3)]
+    with ws:
+        p = ws.proxies[0]
+        uids = p.submit_many(1, reqs)
+        for i, u in enumerate(uids):
+            np.testing.assert_allclose(
+                p.wait_result(u, timeout_s=5), np.full((1, 2), i * 2.0 + 1.0))
+    assert trace_log == [(4, 2)]  # padded to max_batch despite 3 requests
+
+
+def test_bad_batch_result_falls_back_to_solo_execution():
+    """A stage fn whose batched result can't be split per request (wrong
+    leading dim) is retried message-by-message instead of dropping the
+    whole batch."""
+    calls = []
+
+    def reduces(p):
+        x = np.asarray(p["x"])
+        calls.append(x.shape)
+        return {"x": x.mean(axis=0, keepdims=True)}  # [1, 2] even for [4, 2]
+
+    ws = WorkflowSet("fallback")
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mean", fn=reduces, exec_time_s=0.001),
+    ]))
+    ws.add_instance("m0", stage="mean", max_batch=4, max_wait_s=10.0)
+    p = ws.add_proxy("p0")
+    reqs = [{"x": np.full((1, 2), float(i), np.float32)} for i in range(4)]
+    with ws:
+        uids = p.submit_many(1, reqs)
+        results = [p.wait_result(u, timeout_s=5) for u in uids]
+    for i, r in enumerate(results):
+        np.testing.assert_allclose(r["x"], np.full((1, 2), float(i)))
+    assert calls[0] == (4, 2) and calls[1:] == [(1, 2)] * 4
+    assert ws.instances["fallback.m0"].stats.dropped == 0
+    assert ws.instances["fallback.m0"].stats.solo_fallbacks == 1  # observable
+
+
+# ------------------------------------------------- cluster integration: CM
+def test_collaboration_mode_batched_shards_and_splits():
+    """CM with a stacked batch: every worker shards the whole batch, the
+    combined result splits back per request."""
+    ws = WorkflowSet("cmb")
+
+    def cm_stage(p, worker_idx=0, n_workers=1):
+        x = np.asarray(p["x"])  # [N, 2]
+        return {"x": np.full((x.shape[0], 2), float(worker_idx), np.float32)}
+
+    ws.register_workflow(WorkflowSpec(1, "cm", [
+        StageSpec("shard", fn=cm_stage, exec_time_s=0.001, mode="CM"),
+    ]))
+    ws.add_instance("c0", stage="shard", n_workers=3, mode="CM",
+                    max_batch=4, max_wait_s=0.02)
+    p = ws.add_proxy("p0")
+    reqs = [{"x": np.zeros((1, 2), np.float32)} for _ in range(4)]
+    with ws:
+        uids = p.submit_many(1, reqs)
+        outs = [p.wait_result(u, timeout_s=5) for u in uids]
+    for o in outs:
+        np.testing.assert_allclose(o["x"], [[0, 0, 1, 1, 2, 2]])
+    assert ws.instances["cmb.c0"].stats.batches == 1
+    assert ws.instances["cmb.c0"].stats.processed == 4
+
+
+def test_cm_combine_mismatch_drops_but_scheduler_survives():
+    """Shards that disagree on shape make _combine_partials raise; the
+    request must be accounted as dropped and the scheduler thread must
+    keep serving later requests."""
+    ws = WorkflowSet("cmerr")
+    state = {"bad": True}
+
+    def shard(p, worker_idx=0, n_workers=1):
+        if state["bad"] and worker_idx == 1:
+            return np.zeros((3, 2), np.float32)  # mismatched non-concat dim
+        return np.zeros((2, 2), np.float32)
+
+    ws.register_workflow(WorkflowSpec(1, "cm", [
+        StageSpec("shard", fn=shard, exec_time_s=0.001, mode="CM"),
+    ]))
+    ws.add_instance("c0", stage="shard", n_workers=2, mode="CM")
+    p = ws.add_proxy("p0")
+    with ws:
+        bad_uid = p.submit(1, np.float32(0.0))
+        deadline = time.monotonic() + 5.0
+        while ws.instances["cmerr.c0"].stats.dropped == 0:
+            assert time.monotonic() < deadline, "drop never accounted"
+            time.sleep(0.005)
+        state["bad"] = False
+        good_uid = p.submit(1, np.float32(0.0))
+        res = p.wait_result(good_uid, timeout_s=5)  # scheduler still alive
+    np.testing.assert_allclose(res, np.zeros((2, 4), np.float32))
+    assert p.poll_result(bad_uid) is None

@@ -69,6 +69,37 @@ def test_workflow_set_serves_aigc_requests(pipe):
     assert d0 + d1 == 4 and d0 > 0 and d1 > 0
 
 
+def test_batched_workflow_set_matches_monolithic(pipe):
+    """Microbatched execution (max_batch=4): requests coalesce into one
+    stacked jitted call per stage, yet every request's output must match
+    its own per-request monolithic run — randomness is derived per seed,
+    so batch composition can't leak between requests."""
+    fns = build_stage_fns(pipe)
+    ws = WorkflowSet("aigc_mb")
+    ws.register_workflow(WorkflowSpec(APP, "i2v", [
+        StageSpec(s, fn=fns[s], exec_time_s=0.01) for s in STAGES
+    ]))
+    for s in STAGES:
+        # generous deadline: the submit_many burst fills max_batch at once,
+        # so the wait only matters if the box stalls mid-poll — a short
+        # deadline would then flush a partial batch and flake the
+        # batches==1 assertion below.
+        ws.add_instance(f"{s}_0", stage=s, max_batch=4, max_wait_s=2.0)
+    proxy = ws.add_proxy("p0")
+
+    reqs = [make_request(pipe, i) for i in range(4)]
+    monos = [pipe.generate(r["tokens"], r["image"], seed=r["seed"]) for r in reqs]
+    with ws:
+        uids = proxy.submit_many(APP, reqs)
+        outs = [proxy.wait_result(u, timeout_s=120) for u in uids]
+    for out, mono in zip(outs, monos):
+        assert out.shape == mono.shape
+        np.testing.assert_allclose(out, mono, atol=1e-5)
+    inst = ws.instances["aigc_mb.diffusion_0"]
+    assert inst.stats.processed == 4
+    assert inst.stats.batches == 1  # one stacked invocation, not four
+
+
 def test_theorem1_plan_for_measured_stage_times(pipe):
     times = measure_stage_times(pipe)
     chain = [times[s] for s in STAGES]

@@ -270,6 +270,36 @@ def test_case6_x_claims_slot_y_overwrote_buffer():
     assert rb.poll() is None
 
 
+def test_takeover_mid_batch_never_appends_behind_consumer_head():
+    """Stale-tail fast-forward: producer X commits an entry (WL) but stalls
+    before its doorbell (UH); the co-located consumer drains the entry via
+    its busy bit; producer Y then takes over X's lock and appends.  Y's
+    header read sees the stale tail — without the hs > ts fast-forward it
+    would write *behind* the consumer head and the entry could never be
+    consumed (the hang PR 3's concurrent batched producers exposed)."""
+    _, rb = make_rb(n_slots=8, buf_size=1024)
+    px = RingProducer(rb, 1)
+    py = RingProducer(rb, 2, lock_timeout_s=1e-4)
+
+    op = px.start_append(b"X" * 20)
+    for _ in range(4):  # lock, gh, wb, wl — stops before uh
+        op.step()
+    assert op.state == "uh"
+    assert rb.poll() == b"X" * 20  # consumer outruns the pending doorbell
+
+    assert py.append_many([b"Y" * 20, b"Z" * 20]) == 2
+    assert rb.stats.tail_fastforwards >= 1
+    assert rb.poll() == b"Y" * 20  # would be None without the fix
+    assert rb.poll() == b"Z" * 20
+
+    # X's delayed doorbell rewinds the tail header; the next producer must
+    # fast-forward again rather than strand its entry behind the head.
+    op.run()
+    assert py.append(b"W" * 20)
+    assert rb.poll() == b"W" * 20
+    assert rb.poll() is None
+
+
 def test_theorem2_busy_slot_not_skipped():
     """Once a producer sets a busy bit, the consumer must traverse that slot
     (Theorem 2): no later producer can steal it before consumption."""

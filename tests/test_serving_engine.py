@@ -32,6 +32,33 @@ def test_generate_batched(arch):
     assert (res.tokens >= 0).all() and (res.tokens < cfg.vocab_size).all()
 
 
+@pytest.mark.parametrize("arch", ["qwen3-1.7b", "rwkv6-7b", "zamba2-1.2b",
+                                  "whisper-large-v3"])
+def test_scan_decode_matches_token_loop(arch):
+    """The on-device prefill + scan generation must reproduce the seed's
+    teacher-forced token-at-a-time loop exactly at temperature 0 — the
+    O(1)-host-sync path is a pure re-staging of the same math."""
+    cfg = reduced(arch)
+    eng = ServingEngine(cfg, max_len=32)
+    prompts = np.random.default_rng(1).integers(
+        0, cfg.vocab_size, (2, 5)).astype(np.int32)
+    fast = eng.generate(prompts, steps=8)
+    ref = eng.generate_reference(prompts, steps=8)
+    np.testing.assert_array_equal(fast.tokens, ref.tokens)
+
+
+def test_prompt_length_only_changes_prefill_shape():
+    """Different prompt lengths reuse the same decode-loop trace (the
+    padded cache is always the max_len layout)."""
+    cfg = reduced("qwen3-1.7b")
+    eng = ServingEngine(cfg, max_len=32)
+    for p in (3, 5, 9):
+        prompts = np.ones((2, p), np.int32)
+        res = eng.generate(prompts, steps=4)
+        assert res.tokens.shape == (2, p + 4)
+        assert (res.tokens[:, :p] == prompts).all()
+
+
 def test_generation_deterministic_greedy():
     cfg = reduced("qwen3-1.7b")
     eng = ServingEngine(cfg, max_len=32)
