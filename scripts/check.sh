@@ -1,0 +1,22 @@
+#!/usr/bin/env bash
+# Repo check runner (no make needed):
+#   scripts/check.sh          # fast tier (~10s), then the full tier
+#   scripts/check.sh --fast   # fast tier only (transport/cluster/control)
+# Extra args after the mode flag are passed through to pytest.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
+
+fast_only=0
+if [ "${1:-}" = "--fast" ]; then
+    fast_only=1
+    shift
+fi
+
+echo "== fast tier: pytest -m 'not slow' =="
+python -m pytest -q -m "not slow" "$@"
+
+if [ "$fast_only" = "0" ]; then
+    echo "== full tier: pytest =="
+    python -m pytest -q "$@"
+fi

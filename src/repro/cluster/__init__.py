@@ -5,6 +5,7 @@ regionally-autonomous Workflow Sets.
 from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
 from repro.cluster.instance import ResultDeliver, WorkflowInstance
 from repro.cluster.node_manager import (
+    ControlLoop,
     InstanceInfo,
     NMCluster,
     NodeManager,
@@ -17,6 +18,7 @@ from repro.cluster.workflow_set import MultiSetFrontend, WorkflowSet
 
 __all__ = [
     "Acceptor",
+    "ControlLoop",
     "DatabaseInstance",
     "InstanceInfo",
     "LossyNetwork",

@@ -51,6 +51,8 @@ class DatabaseInstance:
             return e.value
 
     def purge(self, uid: str) -> None:
+        if not self.alive:
+            raise ConnectionError(f"db {self.name} down")
         with self._lock:
             self._data.pop(uid, None)
 
@@ -78,32 +80,69 @@ class ReplicatedDatabase:
 
     def __init__(self, replicas: Sequence[DatabaseInstance]):
         self.replicas = list(replicas)
+        self._lock = threading.Lock()
+        # uids whose post-fetch purge could not reach a replica (it was
+        # down at the time): applied on the next touch once it recovers,
+        # so a purged "accessed-once" result can never resurrect there.
+        self._missed_purges: List[set] = [set() for _ in self.replicas]
+
+    def _flush_missed_purges(self, idx: int, r: DatabaseInstance) -> None:
+        if not self._missed_purges[idx]:  # hot path: no failure backlog
+            return
+        with self._lock:
+            pending = list(self._missed_purges[idx])
+        for uid in pending:
+            try:
+                r.purge(uid)
+            except ConnectionError:
+                return  # still down; keep the backlog
+            with self._lock:
+                self._missed_purges[idx].discard(uid)
 
     def store(self, uid: str, value: Any, ttl_s: Optional[float] = None) -> int:
         ok = 0
-        for r in self.replicas:
+        for idx, r in enumerate(self.replicas):
+            self._flush_missed_purges(idx, r)
             try:
                 r.store(uid, value, ttl_s)
                 ok += 1
             except ConnectionError:
                 continue
+            if self._missed_purges[idx]:
+                with self._lock:
+                    # a fresh store supersedes any purge deferred for this uid
+                    self._missed_purges[idx].discard(uid)
         if ok == 0:
             raise ConnectionError("all database replicas down")
         return ok
 
     def fetch(self, uid: str) -> Optional[Any]:
         value = None
-        for r in self.replicas:
+        missed: List[int] = []
+        for idx, r in enumerate(self.replicas):
+            self._flush_missed_purges(idx, r)
             if value is not None:
                 # propagate the purge: "data is automatically purged" after
                 # a successful client fetch (§3.4)
-                if r.purge_on_fetch and r.alive:
-                    r.purge(uid)
+                if r.purge_on_fetch:
+                    try:
+                        r.purge(uid)
+                    except ConnectionError:
+                        missed.append(idx)
                 continue
             try:
                 v = r.fetch(uid)
             except ConnectionError:
+                missed.append(idx)
                 continue
             if v is not None:
                 value = v
+        if value is not None:
+            # replicas that were unreachable anywhere around the hit never
+            # saw the purge — defer it so the result cannot resurrect after
+            # they recover
+            with self._lock:
+                for idx in missed:
+                    if self.replicas[idx].purge_on_fetch:
+                        self._missed_purges[idx].add(uid)
         return value

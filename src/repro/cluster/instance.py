@@ -56,6 +56,8 @@ class InstanceStats:
     dropped: int = 0
     batches: int = 0         # stage-fn invocations (== processed iff unbatched)
     solo_fallbacks: int = 0  # batches degraded to per-message execution
+    handoffs: int = 0        # queued messages forwarded to peers on reassignment
+    reassignments: int = 0   # drain-and-handoff cycles completed
     busy_s: float = 0.0
     window_start: float = field(default_factory=time.monotonic)
 
@@ -159,6 +161,10 @@ class WorkflowInstance:
         self._threads: List[threading.Thread] = []
         self._stage: Optional[str] = None
         self._version = -1
+        # (stage, version) observed by the manager but not yet applied — the
+        # scheduler thread (sole inbox consumer) performs the drain-and-
+        # handoff, then adopts it and confirms to the NM.
+        self._pending: Optional[tuple] = None
         nm.register_instance(name, role="workflow", location=f"{name}.inbox")
 
     # ------------------------------------------------------------ lifecycle
@@ -180,20 +186,65 @@ class WorkflowInstance:
         for t in self._threads:
             t.start()
 
-    def stop(self) -> None:
+    def request_stop(self) -> None:
+        """Signal the threads without waiting (WorkflowSet.stop signals the
+        whole set first, so no instance keeps delivering into inboxes that
+        were already drained for terminal accounting)."""
         self._stop.set()
+
+    def stop(self) -> None:
+        self.request_stop()
+        self.join()
+        self.drain_terminal()
+
+    def join(self) -> None:
         for t in self._threads:
             t.join(timeout=2.0)
 
+    def drain_terminal(self) -> None:
+        """Terminal accounting: whatever is still sitting in the worker queue
+        or the inbox after the threads exit was admitted but will never be
+        processed — count every message so `submitted == stored + dropped`
+        holds across the set (§9: drops are fine, silent isn't).  Call only
+        after every instance that could deliver here has joined — a still-
+        running upstream worker could otherwise land a message after the
+        drain, counted delivered but never processed."""
+        while True:
+            try:
+                self.stats.dropped += len(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        while True:
+            item = self.inbox.poll()
+            if item is None:
+                break
+            self.stats.dropped += 1
+
     # ------------------------------------------------------------ manager
     def _refresh_assignment(self) -> None:
+        """Startup path: adopt the assignment directly (nothing queued yet)."""
         stage, version = self.nm.get_assignment(self.name)
         if version != self._version:
             self._stage, self._version = stage, version
 
+    def _poll_assignment(self) -> None:
+        """Steady-state path: a changed assignment is staged in ``_pending``
+        for the scheduler thread, which owns the drain-and-handoff."""
+        stage, version = self.nm.get_assignment(self.name)
+        if version != self._version:
+            pending = self._pending
+            if pending is None or pending[1] != version:
+                self._pending = (stage, version)
+
     def _manager_loop(self) -> None:
         while not self._stop.is_set():
-            self._refresh_assignment()
+            try:
+                self._poll_assignment()
+            except KeyError:
+                # Evicted by the liveness sweep while still alive (missed
+                # reports): the next utilization report re-registers us into
+                # the idle pool; keep the manager thread up meanwhile.
+                pass
             now = time.monotonic()
             span = max(now - self.stats.window_start, 1e-6)
             util = min(self.stats.busy_s / (span * self.n_workers), 1.0)
@@ -210,9 +261,65 @@ class WorkflowInstance:
         else:
             self._queue.put(batch)  # IM: shared queue, workers pull
 
+    # ------------------------------------------------- drain-and-handoff
+    def _unpack_inbox_backlog(self) -> List[WorkflowMessage]:
+        """Poll the inbox dry, decoding entries (corrupt ones accounted)."""
+        msgs: List[WorkflowMessage] = []
+        while True:
+            item = self.inbox.poll()
+            if item is None:
+                return msgs
+            if isinstance(item, type(CORRUPT)):
+                self.stats.dropped += 1
+                continue
+            try:
+                msgs.append(WorkflowMessage.unpack(item))
+            except Exception:
+                self.stats.dropped += 1
+
+    def _apply_reassignment(self, coalescer: Coalescer) -> None:
+        """Adopt a pending reassignment (scheduler thread only).
+
+        Every queued message — coalescer buckets, the worker queue, the
+        unpolled inbox backlog — still belongs to the *old* stage.  Each is
+        handed off to a live peer of its own stage; if none exists (or the
+        peer's ring is full) it is kept and executed locally, which is still
+        correct because workers resolve the stage fn from the message's own
+        stage index, never from ``self._stage``.  Only after the drain does
+        the instance confirm to the NM, re-entering routing under the new
+        stage."""
+        pending = self._pending
+        if pending is None:
+            return
+        self._pending = None
+        new_stage, version = pending
+        leftovers: List[WorkflowMessage] = []
+        for _, batch in coalescer.flush_all():
+            leftovers.extend(batch)
+        while True:
+            try:
+                leftovers.extend(self._queue.get_nowait())
+            except queue.Empty:
+                break
+        leftovers.extend(self._unpack_inbox_backlog())
+        for msg in leftovers:
+            stage = self._stage_name_of(msg)
+            peers = [t for t in (self.nm.stage_instances(stage) if stage else [])
+                     if t != self.name]
+            if peers and self.rd.router.send(
+                    peers, msg, rr_key=("handoff", msg.app_id, msg.stage)
+            ) is not None:
+                self.stats.handoffs += 1
+            else:
+                self._dispatch([msg])  # no live peer: run it here, correctly
+        self._stage, self._version = new_stage, version
+        self.stats.reassignments += 1
+        self.nm.confirm_reassignment(self.name)
+
     def _scheduler_loop(self) -> None:
         coalescer = Coalescer(max_batch=self.max_batch, max_wait_s=self.max_wait_s)
         while not self._stop.is_set():
+            self._apply_reassignment(coalescer)
             item = self.inbox.poll()
             if item is None:
                 for _, batch in coalescer.pop_expired():
@@ -253,11 +360,23 @@ class WorkflowInstance:
             self.stats.dropped += len(batch)
 
     # ------------------------------------------------------------- workers
+    def _stage_name_of(self, msg: WorkflowMessage) -> Optional[str]:
+        """The stage a message *carries* (its stage index resolved against
+        its app's workflow) — the only stage identity execution and routing
+        may use.  ``self._stage`` is mutable under reassignment; a queued
+        batch must never execute under the stage the instance was
+        reassigned *to*."""
+        try:
+            return self.nm.stage_name(msg.app_id, msg.stage)
+        except (KeyError, IndexError):
+            return None
+
     def _stage_callable(self, msg: WorkflowMessage) -> Optional[Callable]:
-        if self._stage is None:
+        stage = self._stage_name_of(msg)
+        if stage is None:
             return None
         try:
-            return self.nm.stage_fn(msg.app_id, self._stage).fn
+            return self.nm.stage_fn(msg.app_id, stage).fn
         except KeyError:
             return None
 
@@ -320,11 +439,19 @@ class WorkflowInstance:
         self.stats.processed += len(pairs)
         if not pairs:
             return
+        # Route by the stage the batch was executed under (the messages'
+        # own stage — the bucket key pins one (app, stage) per batch), not
+        # by self._stage: a reassignment between execution and delivery
+        # must not re-aim the results at the new stage's next hops.
+        stage = self._stage_name_of(pairs[0][0])
+        if stage is None:
+            self.stats.dropped += len(pairs)
+            return
         out = [m.next_stage(r) for m, r in pairs]
         if len(out) == 1:
-            ok = 1 if self.rd.deliver(out[0], self._stage, self.buffers) else 0
+            ok = 1 if self.rd.deliver(out[0], stage, self.buffers) else 0
         else:
-            ok = self.rd.deliver_many(out, self._stage, self.buffers)
+            ok = self.rd.deliver_many(out, stage, self.buffers)
         self.stats.delivered += ok
         self.stats.dropped += len(out) - ok
 

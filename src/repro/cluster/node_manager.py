@@ -5,10 +5,24 @@ utilization reports, and performs the §8.2 elastic assignment loop:
 
   1. instances report utilization            (report_utilization)
   2. NM averages per stage over a window     (_stage_utilization)
-  3. busiest stage identified                 (rebalance)
+  3. busiest stage identified                 (plan_rebalance)
   4. util > threshold -> assign an instance  (from the Idle Instance Pool,
      or steal from the least-utilized stage below `steal_below`)
   5. role/tasks/next-hop state delivered      (instances poll get_assignment)
+
+The live driver of that loop is ``ControlLoop`` (started by
+``WorkflowSet.start()``): it evicts instances whose utilization reports
+stopped arriving (liveness), runs one rebalance step per tick against the
+real traffic, and pushes Theorem-1 capacity updates into every
+NM-managed proxy ``RequestMonitor`` (§5: the NM "continuously calculates
+K" as instances come and go).
+
+Reassignment is two-phase when ``drain=True``: the instance keeps its new
+stage in ``get_assignment`` immediately, but it is *excluded from routing
+for both stages* until it confirms it has drained and handed off its
+queued old-stage messages (``confirm_reassignment``).  This is what makes
+a mid-flight reassignment safe — no message is ever routed to, or executed
+by, an instance under the wrong stage identity.
 
 Primary/backup replication with Paxos election lives in NMCluster.
 Workflows are DAG-free stage chains keyed by app_id; instance sharing (§8.3)
@@ -52,6 +66,8 @@ class InstanceInfo:
     location: str = ""                   # fabric region of its inbox
     utilization: deque = field(default_factory=lambda: deque(maxlen=64))
     version: int = 0                     # bumped on reassignment
+    last_report: float = field(default_factory=time.monotonic)
+    draining: bool = False               # reassigned, handoff not yet confirmed
 
 
 class NodeManager:
@@ -77,14 +93,42 @@ class NodeManager:
     def register_workflow(self, wf: WorkflowSpec) -> None:
         with self._lock:
             self.workflows[wf.app_id] = wf
+            # A new workflow changes routing (next_hops now resolve for its
+            # app ids) — routers caching by topology version must see it.
+            self._topology_version += 1
 
-    def assign(self, name: str, stage: Optional[str]) -> None:
+    def assign(self, name: str, stage: Optional[str], *, drain: bool = False) -> None:
+        """Reassign an instance.  With ``drain=True`` (the live control
+        loop path) the instance is marked draining: it is excluded from
+        routing for *both* the old and the new stage until it calls
+        ``confirm_reassignment`` after handing off its queued messages."""
         with self._lock:
             info = self.instances[name]
             self.reassignments.append((name, info.stage, stage or "idle"))
+            info.draining = bool(drain and info.stage is not None
+                                 and info.stage != stage)
             info.stage = stage
             info.version += 1
             self._topology_version += 1
+
+    def confirm_reassignment(self, name: str) -> None:
+        """Instance-side acknowledgement that the drain-and-handoff for its
+        last reassignment finished: its inbox is now registered under the
+        new stage (it re-enters routing)."""
+        with self._lock:
+            info = self.instances.get(name)
+            if info is not None and info.draining:
+                info.draining = False
+                self._topology_version += 1
+
+    def evict_instance(self, name: str) -> None:
+        """Liveness eviction: remove a dead instance from the registry and
+        from every next-hop set (topology bump invalidates router caches)."""
+        with self._lock:
+            info = self.instances.pop(name, None)
+            if info is not None:
+                self.reassignments.append((name, info.stage, "evicted"))
+                self._topology_version += 1
 
     # ------------------------------------------------------------- queries
     def topology_version(self) -> int:
@@ -107,10 +151,18 @@ class NodeManager:
                     return s
             raise KeyError(f"stage {stage} not in workflow {app_id}")
 
+    def stage_name(self, app_id: int, stage_idx: int) -> str:
+        """Resolve a message's stage *index* to its stage name.  This is the
+        stage identity a message carries through the pipeline — instances
+        must execute/route by it, never by their own (mutable) assignment."""
+        with self._lock:
+            return self.workflows[app_id].stages[stage_idx].name
+
     def stage_instances(self, stage: str) -> List[str]:
         with self._lock:
             return [n for n, i in self.instances.items()
-                    if i.stage == stage and i.role == "workflow"]
+                    if i.stage == stage and i.role == "workflow"
+                    and not i.draining]
 
     def idle_instances(self) -> List[str]:
         with self._lock:
@@ -139,7 +191,22 @@ class NodeManager:
     # ----------------------------------------------------------- monitoring
     def report_utilization(self, name: str, util: float) -> None:
         with self._lock:
-            self.instances[name].utilization.append(util)
+            info = self.instances.get(name)
+            if info is None:
+                # A report from an instance the NM evicted (false-positive
+                # liveness timeout, or a replica that missed the register):
+                # re-admit it to the idle pool rather than crash its manager.
+                self.register_instance(name, role="workflow")
+                info = self.instances[name]
+            info.utilization.append(util)
+            info.last_report = time.monotonic()
+
+    def dead_instances(self, timeout_s: float, now: Optional[float] = None) -> List[str]:
+        """Workflow instances whose utilization reports stopped arriving."""
+        now = time.monotonic() if now is None else now
+        with self._lock:
+            return [n for n, i in self.instances.items()
+                    if i.role == "workflow" and now - i.last_report > timeout_s]
 
     def _stage_utilization(self) -> Dict[str, float]:
         with self._lock:
@@ -153,30 +220,39 @@ class NodeManager:
             return {s: sum(v) / len(v) for s, v in per_stage.items()}
 
     # --------------------------------------------------- elastic assignment
-    def rebalance(self) -> Optional[Tuple[str, str]]:
+    def plan_rebalance(self) -> Optional[Tuple[str, str]]:
+        """Pure §8.2 decision step (no mutation): returns (instance, stage)
+        if one should move.  Split from the mutation so NMCluster can plan
+        on the primary and replicate the resulting ``assign`` — every
+        replica applies the identical write stream."""
+        with self._lock:
+            utils = self._stage_utilization()
+            if not utils:
+                return None
+            busiest, busy_util = max(utils.items(), key=lambda kv: kv[1])
+            if busy_util < self.scale_threshold:
+                return None
+            # 1) idle pool first
+            idle = self.idle_instances()
+            if idle:
+                return idle[0], busiest
+            # 2) steal from the least-utilized stage (Figure 10)
+            donors = [(s, u) for s, u in utils.items()
+                      if s != busiest and u < self.steal_below]
+            if not donors:
+                return None
+            donor_stage = min(donors, key=lambda kv: kv[1])[0]
+            donor_insts = self.stage_instances(donor_stage)
+            if len(donor_insts) <= 1:
+                return None  # never empty a stage
+            return donor_insts[-1], busiest
+
+    def rebalance(self, *, drain: bool = False) -> Optional[Tuple[str, str]]:
         """One §8.2 step. Returns (instance, stage) if a reassignment happened."""
-        utils = self._stage_utilization()
-        if not utils:
-            return None
-        busiest, busy_util = max(utils.items(), key=lambda kv: kv[1])
-        if busy_util < self.scale_threshold:
-            return None
-        # 1) idle pool first
-        idle = self.idle_instances()
-        if idle:
-            self.assign(idle[0], busiest)
-            return idle[0], busiest
-        # 2) steal from the least-utilized stage (Figure 10)
-        donors = [(s, u) for s, u in utils.items()
-                  if s != busiest and u < self.steal_below]
-        if not donors:
-            return None
-        donor_stage = min(donors, key=lambda kv: kv[1])[0]
-        donor_insts = self.stage_instances(donor_stage)
-        if len(donor_insts) <= 1:
-            return None  # never empty a stage
-        self.assign(donor_insts[-1], busiest)
-        return donor_insts[-1], busiest
+        move = self.plan_rebalance()
+        if move is not None:
+            self.assign(move[0], move[1], drain=drain)
+        return move
 
     # ----------------------------------------------------------- pipelining
     def plan_stage_instances(self, app_id: int, k_entrance: int = 1) -> Dict[str, int]:
@@ -188,21 +264,201 @@ class NodeManager:
         counts = plan_chain(times, k_entrance)
         return dict(zip(wf.stage_names(), counts))
 
+    def entrance_capacity(self) -> Optional[Tuple[float, float]]:
+        """Theorem-1 admissible capacity ``(t_entrance_s, k_entrance)`` from
+        *live* instance counts.  With one distinct entrance stage (shared
+        entrance stages count once, §8.3) this is the theorem's exact
+        (T_X, K); with several it degrades to ``(1.0, Σ k_i/t_i)`` — the
+        aggregate rate with the same ``k/t`` semantics."""
+        with self._lock:
+            entrances: Dict[str, float] = {}
+            for wf in self.workflows.values():
+                if wf.stages:
+                    s0 = wf.stages[0]
+                    entrances[s0.name] = max(s0.exec_time_s, 1e-9)
+            if not entrances:
+                return None
+            if len(entrances) == 1:
+                name, t = next(iter(entrances.items()))
+                return t, float(len(self.stage_instances(name)))
+            rate = sum(len(self.stage_instances(n)) / t
+                       for n, t in entrances.items())
+            return 1.0, rate
+
+    # --------------------------------------------------------- replication
+    @staticmethod
+    def _copy_info(info: InstanceInfo) -> InstanceInfo:
+        return InstanceInfo(
+            name=info.name, role=info.role, stage=info.stage,
+            location=info.location,
+            utilization=deque(info.utilization, maxlen=64),
+            version=info.version, last_report=info.last_report,
+            draining=info.draining,
+        )
+
+    def absorb(self, other: "NodeManager") -> None:
+        """State carry-over (§8.1): merge another replica's registrations and
+        assignments into this one.  Per instance the higher assignment
+        version wins; workflows union.  Entries are copied — replicas must
+        never share mutable InstanceInfo objects, or one replicated write
+        would apply twice.  Used by NMCluster.maybe_elect so a newly
+        elected primary serves the most complete state any live replica
+        saw."""
+        with self._lock, other._lock:
+            for app_id, wf in other.workflows.items():
+                self.workflows.setdefault(app_id, wf)
+            for name, info in other.instances.items():
+                mine = self.instances.get(name)
+                if mine is None or info.version > mine.version:
+                    self.instances[name] = self._copy_info(info)
+            self._topology_version = (
+                max(self._topology_version, other._topology_version) + 1
+            )
+
+    def sync_from(self, primary: "NodeManager") -> None:
+        """Recovered-replica resync: replace local state with the primary's
+        (the replica missed every write while it was down)."""
+        with primary._lock:
+            instances = {n: self._copy_info(i)
+                         for n, i in primary.instances.items()}
+            workflows = dict(primary.workflows)
+            version = primary._topology_version
+            log = list(primary.reassignments)
+        with self._lock:
+            self.instances = instances
+            self.workflows = workflows
+            self._topology_version = version
+            self.reassignments = log
+
+
+class ControlLoop:
+    """§8 live control plane, one thread per Workflow Set.
+
+    Each tick:
+      1. liveness   — instances whose utilization reports stopped arriving
+                      for ``liveness_timeout_s`` are evicted (topology bump
+                      drops them from every next-hop set and router cache);
+      2. rebalance  — one §8.2 step against the live utilization window;
+                      moves use drain-and-handoff (``assign(drain=True)``)
+                      so queued messages are never executed under the
+                      wrong stage identity;
+      3. capacity   — Theorem-1 ``(T_X, K)`` from live entrance-stage
+                      instance counts is pushed into every NM-managed
+                      proxy RequestMonitor (§5).
+    """
+
+    def __init__(self, nm, *, monitors=(), interval_s: float = 0.05,
+                 liveness_timeout_s: float = 2.0, drain: bool = True):
+        self.nm = nm
+        # Sequence, or a zero-arg callable re-read every tick so monitors of
+        # proxies added after start() still receive capacity pushes.
+        self._monitors_src = monitors if callable(monitors) else (
+            lambda frozen=list(monitors): frozen)
+        self.interval_s = interval_s
+        self.liveness_timeout_s = liveness_timeout_s
+        self.drain = drain
+        self.moves: List[Tuple[str, str]] = []
+        self.evicted: List[str] = []
+        self.errors: List[str] = []  # repr of step() failures (loop survives)
+        self.capacity_pushes = 0
+        self.steps = 0
+        self._stop = threading.Event()
+        self._thread: Optional[threading.Thread] = None
+
+    @property
+    def monitors(self) -> List:
+        return list(self._monitors_src())
+
+    def step(self) -> None:
+        self.steps += 1
+        for name in self.nm.dead_instances(self.liveness_timeout_s):
+            self.nm.evict_instance(name)
+            self.evicted.append(name)
+        move = self.nm.plan_rebalance()
+        if move is not None:
+            self.nm.assign(move[0], move[1], drain=self.drain)
+            self.moves.append(move)
+        cap = self.nm.entrance_capacity()
+        if cap is not None:
+            for mon in self.monitors:
+                if getattr(mon, "nm_managed", False):
+                    mon.update_capacity(cap[0], cap[1])
+                    self.capacity_pushes += 1
+
+    def _loop(self) -> None:
+        while not self._stop.is_set():
+            try:
+                self.step()
+            except Exception as e:  # noqa: BLE001
+                # A failed tick must not kill the control plane — eviction,
+                # rebalance and capacity pushes would all silently stop.
+                if len(self.errors) < 64:
+                    self.errors.append(repr(e))
+            self._stop.wait(self.interval_s)
+
+    def start(self) -> None:
+        self._stop.clear()
+        self._thread = threading.Thread(target=self._loop, daemon=True,
+                                        name="nm-control")
+        self._thread.start()
+
+    def stop(self) -> None:
+        self._stop.set()
+        if self._thread is not None:
+            self._thread.join(timeout=2.0)
+            self._thread = None
+
+
+#: NodeManager methods that mutate state — NMCluster fans these out to every
+#: live replica so backups track the primary write-for-write (§8.1).
+_NM_WRITES = (
+    "register_instance",
+    "register_workflow",
+    "assign",
+    "confirm_reassignment",
+    "evict_instance",
+    "report_utilization",
+)
+
+
+def _make_replicated(fn_name: str):
+    def write(self, *args, **kwargs):
+        return self.replicate_write(fn_name, *args, **kwargs)
+
+    write.__name__ = fn_name
+    write.__doc__ = f"Replicated NodeManager.{fn_name} (fan-out to live replicas)."
+    return write
+
 
 class NMCluster:
-    """Primary-backup NM replicas with heartbeat + Paxos election (§8.1)."""
+    """Primary-backup NM replicas with heartbeat + Paxos election (§8.1).
 
-    def __init__(self, n_replicas: int = 3, heartbeat_timeout: float = 3.0):
-        self.replicas = [NodeManager() for _ in range(n_replicas)]
+    Quacks like a NodeManager: reads delegate to the elected primary
+    (electing one on demand if the primary died), writes fan out through
+    ``replicate_write`` to every live replica.  A WorkflowSet can therefore
+    be constructed directly on a cluster (``WorkflowSet(nm=NMCluster())``)
+    and survive a primary failure mid-traffic."""
+
+    def __init__(self, n_replicas: int = 3, heartbeat_timeout: float = 3.0,
+                 **nm_kwargs):
+        self.replicas = [NodeManager(**nm_kwargs) for _ in range(n_replicas)]
         self.node_ids = list(range(n_replicas))
         self.primary_id: Optional[int] = 0
         self.heartbeat_timeout = heartbeat_timeout
         self.last_heartbeat = time.monotonic()
         self.alive = set(self.node_ids)
+        self._elect_lock = threading.Lock()
 
     @property
     def primary(self) -> NodeManager:
         assert self.primary_id is not None
+        return self.replicas[self.primary_id]
+
+    def _require_primary(self) -> NodeManager:
+        """Primary for reads; any caller noticing a missing leader triggers
+        the election (paper: 'any replica noticing a missing heartbeat')."""
+        if self.primary_id is None:
+            self.maybe_elect()
         return self.replicas[self.primary_id]
 
     def heartbeat(self) -> None:
@@ -213,20 +469,71 @@ class NMCluster:
         if node_id == self.primary_id:
             self.primary_id = None
 
+    def recover(self, node_id: int, *, resync: bool = True) -> None:
+        """Bring a failed replica back.  With ``resync`` (default) it copies
+        the primary's full state — it missed every replicated write while it
+        was down.  ``resync=False`` models a replica rejoining before the
+        resync completes (its stale state is what maybe_elect's union
+        carry-over protects against)."""
+        self.alive.add(node_id)
+        if resync and self.primary_id is not None and node_id != self.primary_id:
+            self.replicas[node_id].sync_from(self.primary)
+
     def maybe_elect(self, *, drop: float = 0.0, seed: int = 0) -> int:
         """Any replica noticing a missing leader triggers a Paxos election."""
-        if self.primary_id is not None:
-            return self.primary_id
-        candidates = sorted(self.alive)
-        decided = elect_primary(candidates, drop=drop, seed=seed)
-        assert decided and len(set(decided)) == 1, "Paxos safety violated"
-        winner = decided[0]
-        # state carry-over: new leader adopts the most complete replica state
-        # (here: union of registrations across live replicas)
-        self.primary_id = winner
-        return winner
+        with self._elect_lock:
+            if self.primary_id is not None:
+                return self.primary_id
+            candidates = sorted(self.alive)
+            decided = elect_primary(candidates, drop=drop, seed=seed)
+            assert decided and len(set(decided)) == 1, "Paxos safety violated"
+            winner = decided[0]
+            # State carry-over (§8.1): the new leader adopts the union of
+            # registrations/assignments across live replicas, so even if it
+            # personally missed writes (it was down and rejoined un-resynced)
+            # it serves every pre-failure instance and workflow.
+            for i in candidates:
+                if i != winner:
+                    self.replicas[winner].absorb(self.replicas[i])
+            self.primary_id = winner
+            return winner
 
-    def replicate_write(self, fn_name: str, *args) -> None:
-        """Writes go to primary and are propagated to backups (§8.1)."""
+    def replicate_write(self, fn_name: str, *args, **kwargs) -> None:
+        """Writes go to primary and are propagated to backups (§8.1).  The
+        primary applies first — a write it rejects is invalid and the error
+        propagates.  A backup that fails the write has diverged (e.g. it
+        rejoined before its resync finished) and is brought back in line by
+        a full resync from the post-write primary, so the write stream
+        never forks."""
+        if not self.alive:
+            raise ConnectionError("no NM replicas alive")
+        if self.primary_id is None:
+            self.maybe_elect()
+        primary = self.primary_id
+        getattr(self.replicas[primary], fn_name)(*args, **kwargs)
         for i in sorted(self.alive):
-            getattr(self.replicas[i], fn_name)(*args)
+            if i == primary:
+                continue
+            try:
+                getattr(self.replicas[i], fn_name)(*args, **kwargs)
+            except Exception:  # noqa: BLE001 — diverged backup, re-sync it
+                self.replicas[i].sync_from(self.replicas[primary])
+
+    def rebalance(self, *, drain: bool = False) -> Optional[Tuple[str, str]]:
+        """Plan on the primary, replicate the resulting assign — replicas
+        see one write stream and stay deterministic."""
+        move = self._require_primary().plan_rebalance()
+        if move is not None:
+            self.replicate_write("assign", move[0], move[1], drain=drain)
+        return move
+
+    def __getattr__(self, attr: str):
+        # Reads (get_assignment, next_hops, stage_fn, topology_version,
+        # instances, workflows, ...) delegate to the elected primary.
+        if attr.startswith("_"):
+            raise AttributeError(attr)
+        return getattr(self._require_primary(), attr)
+
+
+for _name in _NM_WRITES:
+    setattr(NMCluster, _name, _make_replicated(_name))

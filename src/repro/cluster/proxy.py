@@ -50,33 +50,49 @@ class Proxy:
 
     def submit(self, app_id: int, payload: Any) -> str:
         """Admit (or fast-reject) a generation request; returns the UID the
-        client later polls with."""
-        if self.monitor is not None and not self.monitor.try_admit():
-            raise Rejected(f"proxy {self.name} over admissible rate")
+        client later polls with.  A request dropped at a full entrance ring
+        is a *known* terminal drop — its in-flight token is released
+        immediately (downstream drops are invisible to the proxy and only
+        expire via the monitor's TTL)."""
         instances = self._entrance_instances(app_id)
         if not instances:
             raise Rejected(f"no instances for entrance stage of app {app_id}")
+        if self.monitor is not None and not self.monitor.try_admit():
+            raise Rejected(f"proxy {self.name} over admissible rate")
         msg = WorkflowMessage.new(app_id=app_id, payload=payload, stage=0)
         if self.router.send(instances, msg, rr_key=("entrance", app_id)) is None:
+            self.complete()  # never entered the pipeline
             raise Rejected("entrance ring full")
         return msg.uid_hex
 
     def submit_many(self, app_id: int, payloads: List[Any]) -> List[str]:
         """Batched admission: one doorbell-batched ring append for the whole
         burst.  Returns UIDs for the admitted-and-appended prefix.  Routing
-        is checked before any admission token is consumed; tokens spent on
-        requests later dropped at a full entrance ring are NOT refunded —
-        the same policy as ``submit`` (§9: drops, never retransmits)."""
+        is checked before any admission token is consumed; the dropped
+        suffix of a full entrance ring never entered the pipeline, so its
+        in-flight tokens are released on the spot (§9 still applies on the
+        wire: nothing is retransmitted)."""
         instances = self._entrance_instances(app_id)
         if not instances:
             raise Rejected(f"no instances for entrance stage of app {app_id}")
         if self.monitor is not None:
-            payloads = [p for p in payloads if self.monitor.try_admit()]
+            # Stop at the first rejection so the admitted set is a true
+            # prefix of `payloads` — a mid-list reject (in-flight token
+            # freed by TTL expiry during the loop) would otherwise leave
+            # the caller unable to map returned UIDs back to payloads.
+            admitted = []
+            for p in payloads:
+                if not self.monitor.try_admit():
+                    break
+                admitted.append(p)
+            payloads = admitted
         if not payloads:
             return []
         msgs = [WorkflowMessage.new(app_id=app_id, payload=p, stage=0)
                 for p in payloads]
         n = self.router.send_many(instances, msgs, rr_key=("entrance", app_id))
+        for _ in msgs[n:]:
+            self.complete()  # entrance-ring drop: token back
         return [m.uid_hex for m in msgs[:n]]
 
     def transport_stats(self) -> ChannelStats:

@@ -11,7 +11,12 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
 from repro.cluster.instance import WorkflowInstance
-from repro.cluster.node_manager import NodeManager, StageSpec, WorkflowSpec
+from repro.cluster.node_manager import (
+    ControlLoop,
+    NodeManager,
+    StageSpec,
+    WorkflowSpec,
+)
 from repro.cluster.proxy import Proxy, Rejected
 from repro.core.rdma import RdmaFabric
 from repro.core.request_monitor import RequestMonitor
@@ -21,7 +26,10 @@ from repro.core.transport import ChannelStats
 
 class WorkflowSet:
     def __init__(self, name: str, *, n_databases: int = 2,
-                 nm: Optional[NodeManager] = None):
+                 nm: Optional[NodeManager] = None,
+                 control_loop: bool = True,
+                 control_interval_s: float = 0.05,
+                 liveness_timeout_s: float = 2.0):
         self.name = name
         self.fabric = RdmaFabric()
         self.nm = nm or NodeManager()
@@ -34,6 +42,10 @@ class WorkflowSet:
             self.nm.register_instance(dbi.name, role="database")
         self.database = ReplicatedDatabase(self.db_instances)
         self.proxies: List[Proxy] = []
+        self._control_loop = control_loop
+        self._control_interval_s = control_interval_s
+        self._liveness_timeout_s = liveness_timeout_s
+        self.control: Optional[ControlLoop] = None
         self._started = False
 
     # ------------------------------------------------------------ assembly
@@ -73,11 +85,29 @@ class WorkflowSet:
     def start(self) -> None:
         for inst in self.instances.values():
             inst.start()
+        if self._control_loop:
+            self.control = ControlLoop(
+                self.nm,
+                monitors=lambda: [p.monitor for p in self.proxies
+                                  if p.monitor is not None],
+                interval_s=self._control_interval_s,
+                liveness_timeout_s=self._liveness_timeout_s,
+            )
+            self.control.start()
         self._started = True
 
     def stop(self) -> None:
+        if self.control is not None:
+            self.control.stop()  # kept (stopped) so its audit stats survive
+        # Three phases: signal everyone, join everyone, only then drain for
+        # terminal accounting — a worker of a later-joined instance could
+        # otherwise deliver into an inbox already drained.
         for inst in self.instances.values():
-            inst.stop()
+            inst.request_stop()
+        for inst in self.instances.values():
+            inst.join()
+        for inst in self.instances.values():
+            inst.drain_terminal()
         self._started = False
 
     def __enter__(self) -> "WorkflowSet":

@@ -26,10 +26,11 @@ STAGES = ("text_encode", "vae_encode", "diffusion", "vae_decode")
 
 def build_set(pipe: WanI2VPipeline, *, counts, admit_rate: float,
               name: str = "ws0", max_batch: int = 1,
-              max_wait_s: float = 0.02) -> WorkflowSet:
+              max_wait_s: float = 0.02, elastic: bool = True,
+              spares: int = 0) -> WorkflowSet:
     fns = build_stage_fns(pipe)
     times = measure_stage_times(pipe)
-    ws = WorkflowSet(name)
+    ws = WorkflowSet(name, control_loop=elastic)
     ws.register_workflow(WorkflowSpec(APP_I2V, "wan-i2v", [
         StageSpec(s, fn=fns[s], exec_time_s=times[s]) for s in STAGES
     ]))
@@ -37,8 +38,13 @@ def build_set(pipe: WanI2VPipeline, *, counts, admit_rate: float,
         for i in range(n):
             ws.add_instance(f"{stage}_{i}", stage=stage, max_batch=max_batch,
                             max_wait_s=max_wait_s, pad_to_full=max_batch > 1)
+    for i in range(spares):
+        ws.add_instance(f"spare_{i}", max_batch=max_batch,
+                        max_wait_s=max_wait_s, pad_to_full=max_batch > 1)
+    # nm_managed: the live control loop keeps (T_X, K) tracking the actual
+    # entrance-stage instance count as it rebalances (§5)
     mon = RequestMonitor(t_entrance_s=1.0 / max(admit_rate, 1e-9), k_entrance=1,
-                         window_s=2.0)
+                         window_s=2.0, nm_managed=elastic)
     ws.add_proxy("p0", monitor=mon)
     return ws
 
@@ -53,6 +59,11 @@ def main() -> int:
                     help="stage-level microbatch size (1 = per-request)")
     ap.add_argument("--batch-wait-ms", type=float, default=20.0,
                     help="partial-batch flush deadline")
+    ap.add_argument("--no-elastic", action="store_true",
+                    help="disable the live NM control loop (§8.2)")
+    ap.add_argument("--spare-instances", type=int, default=0,
+                    help="extra idle-pool instances the control loop may "
+                         "pull onto a hot stage")
     args = ap.parse_args()
 
     pipe = WanI2VPipeline(seed=args.seed)
@@ -69,7 +80,9 @@ def main() -> int:
     admit_rate = 1.0 / chain[0]
     ws = build_set(pipe, counts=counts, admit_rate=admit_rate,
                    max_batch=args.max_batch,
-                   max_wait_s=args.batch_wait_ms / 1e3)
+                   max_wait_s=args.batch_wait_ms / 1e3,
+                   elastic=not args.no_elastic,
+                   spares=args.spare_instances)
     proxy = ws.proxies[0]
 
     rng = np.random.default_rng(args.seed)
@@ -115,6 +128,10 @@ def main() -> int:
         print(f"{len(videos)} videos of shape {videos[0].shape} in {wall:.2f}s "
               f"({len(videos)/wall:.2f} req/s)")
     print("per-instance processed:", per_stage)
+    if ws.control is not None:
+        print(f"control loop: {ws.control.steps} ticks, "
+              f"moves={ws.control.moves}, evicted={ws.control.evicted}, "
+              f"capacity_pushes={ws.control.capacity_pushes}")
     fabric = ws.fabric.stats
     print(f"fabric: {fabric.total_ops} one-sided ops, "
           f"{fabric.total_bytes/1e6:.1f} MB moved, "

@@ -1,0 +1,435 @@
+"""Live control plane (§8): stage identity under reassignment,
+drain-and-handoff, ControlLoop liveness/eviction + live rebalance +
+Theorem-1 capacity pushes, NM primary/backup failover with state
+carry-over, RequestMonitor in-flight TTL, database purge propagation.
+"""
+from __future__ import annotations
+
+import threading
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    DatabaseInstance,
+    NMCluster,
+    NodeManager,
+    Rejected,
+    ReplicatedDatabase,
+    StageSpec,
+    WorkflowSet,
+    WorkflowSpec,
+)
+from repro.core import DoubleRingBuffer, RdmaFabric, RequestMonitor, Router
+
+
+def _wait_until(pred, timeout_s: float = 5.0, interval_s: float = 0.005) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval_s)
+    return pred()
+
+
+# ------------------------------------------------- stage identity (satellite)
+def test_reassign_mid_queue_executes_under_original_stage():
+    """Messages queued before a reassignment must execute under THEIR stage
+    fn and route by THEIR stage — never the stage the instance was
+    reassigned *to* — and the results must be bit-identical to an
+    undisturbed run."""
+    gate = threading.Event()
+
+    def mul(p):
+        gate.wait(10.0)
+        return p * np.float32(2.0)
+
+    spec = WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=mul, exec_time_s=1e-3),
+        StageSpec("add", fn=lambda p: p + np.float32(1.0), exec_time_s=1e-3),
+    ])
+
+    def run(reassign: bool):
+        ws = WorkflowSet("sid", control_loop=False)
+        ws.register_workflow(spec)
+        ws.add_instance("m0", stage="mul")
+        ws.add_instance("a0", stage="add")
+        p = ws.add_proxy("p0")
+        gate.clear()
+        with ws:
+            uids = [p.submit(1, np.float32(i)) for i in range(10)]
+            if reassign:
+                time.sleep(0.05)  # worker blocked inside `mul`, rest queued
+                ws.nm.assign("sid.m0", "add", drain=True)
+                _wait_until(
+                    lambda: ws.instances["sid.m0"].stats.reassignments >= 1)
+            gate.set()
+            results = [p.wait_result(u, timeout_s=10) for u in uids]
+        dropped = sum(i.stats.dropped for i in ws.instances.values())
+        return results, dropped, ws
+
+    baseline, dropped0, _ = run(reassign=False)
+    moved, dropped1, ws = run(reassign=True)
+    assert dropped0 == 0 and dropped1 == 0  # every message accounted, none lost
+    for i, (a, b) in enumerate(zip(baseline, moved)):
+        expect = np.float32(i) * np.float32(2.0) + np.float32(1.0)
+        assert a == b == expect
+        assert np.asarray(a).tobytes() == np.asarray(b).tobytes()  # bit-identical
+    assert ws.instances["sid.m0"].stats.reassignments >= 1
+
+
+def test_drain_and_handoff_to_live_peer():
+    """On reassignment, queued messages are handed off to live instances of
+    their own stage and complete there — even while the reassigned
+    instance's worker is still stuck."""
+    gate = threading.Event()
+
+    def mul(p):
+        if float(np.asarray(p)) < 0:
+            gate.wait(10.0)  # blocks only the poison request
+        return p * np.float32(2.0)
+
+    ws = WorkflowSet("hd", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=mul, exec_time_s=1e-3),
+        StageSpec("add", fn=lambda p: p + np.float32(1.0), exec_time_s=1e-3),
+    ]))
+    ws.add_instance("m0", stage="mul")
+    ws.add_instance("m1", stage="mul")
+    ws.add_instance("a0", stage="add")
+    p = ws.add_proxy("p0")
+    with ws:
+        blocker = p.submit(1, np.float32(-1.0))  # round-robin: lands on m0
+        time.sleep(0.05)  # m0's worker is now stuck in `mul`
+        uids = [p.submit(1, np.float32(i)) for i in range(8)]
+        time.sleep(0.05)  # half of them queue behind m0's stuck worker
+        ws.nm.assign("hd.m0", "add", drain=True)
+        # all 8 `mul` executions happen on m1 while m0's worker is still
+        # stuck — m0's queued share got handed off, none ran under "add"
+        m0, m1 = ws.instances["hd.m0"], ws.instances["hd.m1"]
+        assert _wait_until(lambda: m1.stats.processed == 8, timeout_s=5)
+        assert not gate.is_set() and m0.stats.processed == 0
+        assert m0.stats.handoffs >= 1
+        assert m0.stats.reassignments == 1
+        gate.set()  # release the stuck worker (m0 now also serves "add")
+        for i, u in enumerate(uids):
+            assert p.wait_result(u, timeout_s=5) == np.float32(i * 2 + 1)
+        assert p.wait_result(blocker, timeout_s=5) == np.float32(-1.0)
+    assert sum(i.stats.dropped for i in ws.instances.values()) == 0
+
+
+# ------------------------------------------- topology versioning (satellite)
+def test_register_workflow_bumps_topology_and_invalidates_router():
+    fab = RdmaFabric()
+    nm = NodeManager()
+    buffers = {"t": DoubleRingBuffer(fab, "t", n_slots=8, buf_size=4096)}
+    router = Router("sender", buffers, nm=nm)
+    ch0 = router.channel("t")
+    assert router.cached_targets() == ["t"]
+    v0 = nm.topology_version()
+    nm.register_workflow(WorkflowSpec(7, "wf", [StageSpec("s0")]))
+    assert nm.topology_version() == v0 + 1
+    ch1 = router.channel("t")  # cache built pre-registration must be gone
+    assert ch1 is not ch0
+
+
+# ------------------------------------------------- control loop: liveness
+def test_control_loop_evicts_dead_instance_and_traffic_survives():
+    ws = WorkflowSet("ev", control_interval_s=0.02, liveness_timeout_s=0.15)
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=lambda p: p * np.float32(2.0), exec_time_s=1e-3),
+        StageSpec("add", fn=lambda p: p + np.float32(1.0), exec_time_s=1e-3),
+    ]))
+    ws.add_instance("m0", stage="mul")
+    ws.add_instance("m1", stage="mul")
+    ws.add_instance("a0", stage="add")
+    p = ws.add_proxy("p0")
+    with ws:
+        uid = p.submit(1, np.float32(3.0))
+        assert p.wait_result(uid, timeout_s=5) == np.float32(7.0)
+        v0 = ws.nm.topology_version()
+        ws.instances["ev.m1"].stop()  # utilization reports stop arriving
+        assert _wait_until(lambda: "ev.m1" not in ws.nm.instances, timeout_s=3)
+        assert "ev.m1" in ws.control.evicted
+        assert ws.nm.stage_instances("mul") == ["ev.m0"]
+        assert ws.nm.topology_version() > v0  # router caches invalidated
+        for i in range(6):  # all traffic now lands on the survivor
+            u = p.submit(1, np.float32(i))
+            assert p.wait_result(u, timeout_s=5) == np.float32(i * 2 + 1)
+    assert ws.instances["ev.m0"].stats.processed >= 7
+
+
+# ------------------------------------- control loop: capacity push (§5)
+def test_control_loop_pushes_theorem1_capacity_to_managed_monitor():
+    ws = WorkflowSet("cap", control_interval_s=0.02)
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s", fn=lambda p: p, exec_time_s=0.25),
+    ]))
+    ws.add_instance("i0", stage="s")
+    ws.add_instance("i1", stage="s")
+    managed = RequestMonitor(t_entrance_s=1.0, k_entrance=99, nm_managed=True)
+    pinned = RequestMonitor(t_entrance_s=1.0, k_entrance=99)
+    ws.add_proxy("p0", monitor=managed)
+    ws.add_proxy("p1", monitor=pinned)
+    with ws:
+        assert _wait_until(lambda: managed.k_entrance == 2.0, timeout_s=3)
+        assert managed.t_entrance_s == 0.25  # the entrance stage's T_X
+    assert pinned.k_entrance == 99  # unmanaged monitors keep their capacity
+    assert ws.control.capacity_pushes > 0
+
+
+# ------------------------- control loop: live rebalance + parity accounting
+def test_live_rebalance_parity_and_accounting():
+    """The acceptance test: under a ramping load the control loop moves the
+    idle instance onto the hot stage; every submitted message is either
+    delivered with the correct-stage result or accounted in stats.dropped —
+    none misrouted or executed under the wrong stage fn."""
+    nm = NodeManager(scale_threshold=0.5, steal_below=0.4, window=2)
+    ws = WorkflowSet("rb", nm=nm, control_interval_s=0.02,
+                     liveness_timeout_s=10.0)
+
+    def hot(p):
+        time.sleep(0.003)
+        return p * np.float32(2.0)
+
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("hot", fn=hot, exec_time_s=0.003),
+        StageSpec("cold", fn=lambda p: p + np.float32(1.0), exec_time_s=1e-4),
+    ]))
+    ws.add_instance("hot0", stage="hot")
+    ws.add_instance("cold0", stage="cold")
+    ws.add_instance("spare")  # idle pool
+    p = ws.add_proxy("p0")
+    uids = []
+    results = {}
+    with ws:
+        deadline = time.monotonic() + 2.5
+        move_seen_at = None
+        i = 0
+        while time.monotonic() < deadline:
+            try:
+                uids.append((p.submit(1, np.float32(i)), i))
+                i += 1
+            except Rejected:
+                pass
+            time.sleep(0.001)
+            now = time.monotonic()
+            if ws.control.moves and move_seen_at is None:
+                move_seen_at = now
+            if move_seen_at is not None and now - move_seen_at > 0.4:
+                break  # keep load on a little so the new instance sees work
+        assert ws.control.moves, "control loop never rebalanced under load"
+        assert ws.control.moves[0] == ("rb.spare", "hot")
+        assert _wait_until(
+            lambda: "rb.spare" in ws.nm.stage_instances("hot"), timeout_s=3)
+
+        # quiesce: wait until every uid is delivered or dropped
+        def settled():
+            for u, _ in uids:
+                if u not in results:
+                    v = p.poll_result(u)
+                    if v is not None:
+                        results[u] = v
+            dropped = sum(inst.stats.dropped for inst in ws.instances.values())
+            return len(results) + dropped >= len(uids)
+
+        _wait_until(settled, timeout_s=15, interval_s=0.05)
+    # terminal accounting after stop(): queue/inbox leftovers are now counted
+    for u, _ in uids:
+        if u not in results:
+            v = p.poll_result(u)
+            if v is not None:
+                results[u] = v
+    dropped = sum(inst.stats.dropped for inst in ws.instances.values())
+    assert len(results) + dropped == len(uids)
+    for u, i in uids:  # parity: nothing executed under the wrong stage fn
+        if u in results:
+            assert results[u] == np.float32(i * 2 + 1)
+    assert ws.instances["rb.spare"].stats.processed > 0  # it really helped
+
+
+# --------------------------------------------------- NM failover (satellite)
+def _register_live_workflow(ws):
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("mul", fn=lambda p: p * np.float32(2.0), exec_time_s=1e-3),
+        StageSpec("add", fn=lambda p: p + np.float32(1.0), exec_time_s=1e-3),
+    ]))
+
+
+def test_nm_failover_under_live_traffic_serves_pre_failure_state():
+    cluster = NMCluster(n_replicas=3)
+    ws = WorkflowSet("fo", nm=cluster, control_loop=False)
+    _register_live_workflow(ws)
+    ws.add_instance("m0", stage="mul")
+    ws.add_instance("a0", stage="add")
+    p = ws.add_proxy("p0")
+    with ws:
+        uid = p.submit(1, np.float32(5.0))
+        assert p.wait_result(uid, timeout_s=5) == np.float32(11.0)
+        pre = sorted(cluster.instances)
+        pre_assignments = {n: cluster.get_assignment(n) for n in pre
+                           if cluster.instances[n].role == "workflow"}
+        cluster.fail(0)
+        winner = cluster.maybe_elect(seed=42)
+        assert winner in (1, 2)
+        # adopted state serves routing for every pre-failure instance
+        assert sorted(cluster.instances) == pre
+        for name, (stage, version) in pre_assignments.items():
+            assert cluster.get_assignment(name) == (stage, version)
+        assert cluster.next_hops(1, "mul") == ["fo.a0"]
+        # and live traffic keeps flowing through the new primary
+        for i in range(4):
+            u = p.submit(1, np.float32(i))
+            assert p.wait_result(u, timeout_s=5) == np.float32(i * 2 + 1)
+
+
+def test_maybe_elect_adopts_union_from_fresher_replica():
+    """A stale replica (down during writes, rejoined un-resynced) that wins
+    the election must adopt the missed registrations/assignments from the
+    other live replicas — the carry-over maybe_elect used to only mention
+    in a comment."""
+    c = NMCluster(n_replicas=3)
+    c.register_workflow(WorkflowSpec(1, "wf", [StageSpec("s"), StageSpec("t")]))
+    c.register_instance("i0")
+    c.assign("i0", "s")
+    c.fail(1)  # replica 1 misses the next writes
+    c.register_instance("i1")
+    c.assign("i1", "t")
+    c.register_workflow(WorkflowSpec(2, "wf2", [StageSpec("u")]))
+    assert "i1" not in c.replicas[1].instances  # really missed
+    c.recover(1, resync=False)  # rejoins stale (resync hasn't run yet)
+    c.fail(0)  # primary dies
+    winner = c.maybe_elect(seed=0)
+    assert winner == 1  # the stale replica wins ...
+    assert c.get_assignment("i1") == ("t", 1)  # ... but serves the union
+    assert c.get_assignment("i0") == ("s", 1)
+    assert 2 in c.workflows
+    assert c.stage_instances("t") == ["i1"]
+    # adopted entries are copies: a post-election replicated write must
+    # apply exactly once per replica, not twice through a shared object
+    c.assign("i1", "s")
+    assert c.get_assignment("i1") == ("s", 2)
+
+
+def test_recovered_replica_resyncs_from_primary():
+    c = NMCluster(n_replicas=3)
+    c.register_instance("i0")
+    c.assign("i0", "s")
+    c.fail(2)
+    c.register_instance("i1")  # replica 2 misses this
+    c.recover(2)  # default resync copies the primary's state
+    assert c.replicas[2].instances.keys() == c.primary.instances.keys()
+    assert c.replicas[2].topology_version() == c.primary.topology_version()
+    # and it can now win a failover without losing anything
+    c.fail(0)
+    c.fail(1)
+    assert c.maybe_elect() == 2
+    assert c.get_assignment("i1") == (None, 0)
+
+
+def test_replicate_write_resyncs_diverged_backup():
+    """A backup that rejoined before its resync and cannot apply a
+    replicated write is healed by a full resync instead of forking the
+    write stream (or killing the caller)."""
+    c = NMCluster(n_replicas=3)
+    c.fail(1)
+    c.register_instance("i0")  # replica 1 misses the registration
+    c.recover(1, resync=False)
+    c.assign("i0", "s")  # KeyError on stale replica 1 -> auto resync
+    assert c.replicas[1].get_assignment("i0") == ("s", 1)
+    assert c.replicas[1].topology_version() == c.primary.topology_version()
+
+
+def test_replicated_writes_keep_backups_in_lockstep():
+    c = NMCluster(n_replicas=3)
+    c.register_workflow(WorkflowSpec(1, "wf", [StageSpec("s")]))
+    c.register_instance("i0")
+    c.assign("i0", "s")
+    c.report_utilization("i0", 0.7)
+    for r in c.replicas:
+        assert r.get_assignment("i0") == ("s", 1)
+        assert list(r.instances["i0"].utilization) == [0.7]
+        assert r.topology_version() == c.primary.topology_version()
+
+
+# ----------------------------------------- RequestMonitor TTL (satellite)
+def test_in_flight_ttl_unwedges_admission_after_drops():
+    clock = [0.0]
+    mon = RequestMonitor(t_entrance_s=0.001, k_entrance=1000,
+                         max_in_flight=4, in_flight_ttl_s=5.0,
+                         clock=lambda: clock[0])
+    for _ in range(4):
+        assert mon.try_admit()
+    clock[0] += 1.5  # arrivals window clears; the 4 in-flight never complete
+    assert not mon.try_admit()  # wedged on in-flight, as before the fix
+    clock[0] += 5.0  # TTL reclaims the leaked tokens
+    assert mon.try_admit()
+    assert mon.stats.expired == 4
+    assert mon.in_flight == 1
+
+
+def test_entrance_ring_drop_releases_in_flight_token():
+    ws = WorkflowSet("ed", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s", fn=lambda p: p, exec_time_s=1e-3),
+    ]))
+    ws.add_instance("i0", stage="s", ring_slots=4)
+    mon = RequestMonitor(t_entrance_s=1e-4, k_entrance=1000, max_in_flight=100)
+    p = ws.add_proxy("p0", monitor=mon)
+    # the set is never started: nothing drains the entrance ring
+    landed, full = 0, 0
+    for i in range(8):
+        try:
+            p.submit(1, np.float32(i))
+            landed += 1
+        except Rejected:
+            full += 1
+    assert full > 0
+    assert mon.in_flight == landed  # ring-full drops returned their tokens
+    assert mon.stats.admitted == landed + full  # ...but were admitted first
+
+
+def test_submit_many_dropped_suffix_releases_tokens():
+    ws = WorkflowSet("em", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("s", fn=lambda p: p, exec_time_s=1e-3),
+    ]))
+    ws.add_instance("i0", stage="s", ring_slots=4)
+    mon = RequestMonitor(t_entrance_s=1e-4, k_entrance=1000, max_in_flight=100)
+    p = ws.add_proxy("p0", monitor=mon)
+    uids = p.submit_many(1, [np.float32(i) for i in range(16)])
+    assert 0 < len(uids) < 16  # the tiny ring dropped a suffix
+    assert mon.in_flight == len(uids)
+
+
+# ------------------------------------- database purge propagation (satellite)
+def test_missed_purge_applied_after_replica_recovers():
+    a, b = DatabaseInstance("a"), DatabaseInstance("b")
+    rd = ReplicatedDatabase([a, b])
+    rd.store("u", 7)
+    a.alive = False
+    assert rd.fetch("u") == 7  # served by b; the purge for a is deferred
+    a.alive = True  # recovers still holding its stale copy
+    assert rd.fetch("u") is None  # deferred purge applied before the read
+
+
+def test_missed_purge_superseded_by_fresh_store():
+    a, b = DatabaseInstance("a"), DatabaseInstance("b")
+    rd = ReplicatedDatabase([a, b])
+    rd.store("u", 1)
+    a.alive = False
+    assert rd.fetch("u") == 1  # purge for a deferred
+    a.alive = True
+    rd.store("u", 2)  # same uid stored again: deferred purge must not eat it
+    assert rd.fetch("u") == 2
+
+
+def test_missed_purge_for_replica_after_the_hit():
+    a, b, c = DatabaseInstance("a"), DatabaseInstance("b"), DatabaseInstance("c")
+    rd = ReplicatedDatabase([a, b, c])
+    rd.store("u", 3)
+    c.alive = False  # fails AFTER the hit replica in iteration order
+    assert rd.fetch("u") == 3
+    c.alive = True
+    assert rd.fetch("u") is None  # would have resurrected from c otherwise
