@@ -2,21 +2,29 @@
 # Repo check runner (no make needed):
 #   scripts/check.sh          # fast tier (~10s), then the full tier
 #   scripts/check.sh --fast   # fast tier only (transport/cluster/control)
+#   scripts/check.sh --dag    # DAG tier only (routing/join/fault/property)
 # Extra args after the mode flag are passed through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
 
-fast_only=0
-if [ "${1:-}" = "--fast" ]; then
-    fast_only=1
-    shift
+mode=all
+case "${1:-}" in
+    --fast) mode=fast; shift ;;
+    --dag)  mode=dag;  shift ;;
+esac
+
+if [ "$mode" = "dag" ]; then
+    echo "== dag tier: pytest tests/test_dag_workflows.py =="
+    python -m pytest -q -m "not slow" --durations=10 \
+        tests/test_dag_workflows.py "$@"
+    exit 0
 fi
 
 echo "== fast tier: pytest -m 'not slow' =="
-python -m pytest -q -m "not slow" "$@"
+python -m pytest -q -m "not slow" --durations=10 "$@"
 
-if [ "$fast_only" = "0" ]; then
+if [ "$mode" = "all" ]; then
     echo "== full tier: pytest =="
     python -m pytest -q "$@"
 fi

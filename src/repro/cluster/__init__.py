@@ -4,6 +4,7 @@ regionally-autonomous Workflow Sets.
 """
 from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
 from repro.cluster.instance import ResultDeliver, WorkflowInstance
+from repro.cluster.join import JOIN_DEAD, JOIN_PENDING, JoinTable, merge_partials
 from repro.cluster.node_manager import (
     ControlLoop,
     InstanceInfo,
@@ -21,7 +22,11 @@ __all__ = [
     "ControlLoop",
     "DatabaseInstance",
     "InstanceInfo",
+    "JOIN_DEAD",
+    "JOIN_PENDING",
+    "JoinTable",
     "LossyNetwork",
+    "merge_partials",
     "MultiSetFrontend",
     "NMCluster",
     "NodeManager",

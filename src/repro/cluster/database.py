@@ -56,6 +56,16 @@ class DatabaseInstance:
         with self._lock:
             self._data.pop(uid, None)
 
+    def scan(self, prefix: str) -> Dict[str, Any]:
+        """Non-destructive prefix scan (skips expired entries) — used by
+        JoinTable.recover to rebuild fan-in state from the replicas."""
+        if not self.alive:
+            raise ConnectionError(f"db {self.name} down")
+        now = self.clock()
+        with self._lock:
+            return {k: e.value for k, e in self._data.items()
+                    if k.startswith(prefix) and now - e.stored_at <= e.ttl_s}
+
     def purge_expired(self) -> int:
         now = self.clock()
         with self._lock:
@@ -115,6 +125,30 @@ class ReplicatedDatabase:
         if ok == 0:
             raise ConnectionError("all database replicas down")
         return ok
+
+    def purge(self, uid: str) -> None:
+        """Explicit purge on every replica (fan-in joins claim their
+        partials this way).  A replica that is down gets the purge deferred
+        exactly like a post-fetch purge, so the entry cannot resurrect."""
+        for idx, r in enumerate(self.replicas):
+            try:
+                r.purge(uid)
+            except ConnectionError:
+                with self._lock:
+                    self._missed_purges[idx].add(uid)
+
+    def scan(self, prefix: str) -> Dict[str, Any]:
+        """Prefix union across live replicas (first replica seen wins)."""
+        out: Dict[str, Any] = {}
+        for idx, r in enumerate(self.replicas):
+            self._flush_missed_purges(idx, r)
+            try:
+                found = r.scan(prefix)
+            except ConnectionError:
+                continue
+            for k, v in found.items():
+                out.setdefault(k, v)
+        return out
 
     def fetch(self, uid: str) -> Optional[Any]:
         value = None

@@ -39,6 +39,7 @@ from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
 from repro.cluster.database import ReplicatedDatabase
+from repro.cluster.join import JOIN_DEAD, JOIN_PENDING, JoinTable
 from repro.cluster.node_manager import NodeManager
 from repro.core.batching import Coalescer, bucket_key, stack_payloads, unstack_payload
 from repro.core.messaging import WorkflowMessage
@@ -63,25 +64,40 @@ class InstanceStats:
 
 
 class ResultDeliver:
-    """Delivery to next-hop inboxes over the unified transport Router:
-    round-robin across next-stage instances (§4.5), bounded retries on a
-    full ring then drop (§9), cached producers invalidated whenever the NM
-    reassigns a target away from a next-hop set.  ``deliver_many`` keeps a
-    microbatch together: one round-robin pick, one doorbell-batched append,
-    so the batch lands intact in the next stage's coalescer."""
+    """Delivery to next-hop inboxes over the unified transport Router.
+
+    Routing is per-edge over the workflow DAG (docs/workflows.md): a
+    message fans out to every successor stage — each single-dep edge gets
+    its own round-robin target and one doorbell-batched append for the
+    whole microbatch (so batches re-coalesce downstream); each fan-in edge
+    is an ``offer`` into the set-level JoinTable, and the offer that
+    completes a join routes the assembled message onward.  After the
+    terminal stage results go to the replicated database.  Bounded retries
+    on a full ring then drop (§9); drops that know their UID tombstone the
+    whole request in the join table so no partial join is ever delivered.
+    Cached producers are invalidated whenever the NM reassigns a target
+    away from a next-hop set."""
 
     def __init__(self, fabric: RdmaFabric, name: str, nm: NodeManager,
                  database: Optional[ReplicatedDatabase],
-                 buffers: Optional[Dict[str, DoubleRingBuffer]] = None):
+                 buffers: Optional[Dict[str, DoubleRingBuffer]] = None,
+                 joins: Optional[JoinTable] = None):
         self.fabric = fabric
         self.name = name
         self.nm = nm
         self.database = database
+        self.joins = joins
         self.router = Router(name, buffers if buffers is not None else {}, nm=nm)
 
     def _sync_buffers(self, buffers: Optional[Dict[str, DoubleRingBuffer]]) -> None:
         if buffers is not None and buffers is not self.router.buffers:
             self.router.buffers = buffers
+
+    def mark_dropped(self, uid_hex: str) -> None:
+        """Per-request §9 ledger: tombstone the UID (and its sibling
+        partials) in the join table, if this set has one."""
+        if self.joins is not None:
+            self.joins.mark_dropped(uid_hex)
 
     def deliver(self, msg: WorkflowMessage, stage: str,
                 buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> bool:
@@ -89,29 +105,96 @@ class ResultDeliver:
 
     def deliver_many(self, msgs: List[WorkflowMessage], stage: str,
                      buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> int:
-        """Deliver a batch's per-request slices; returns how many landed.
-        All messages must belong to one app (the scheduler's bucket key
-        guarantees it).  Singletons keep the per-message round-robin
-        ``send``; real batches ride one doorbell-batched ``send_many`` to
-        a single target so they re-coalesce downstream."""
+        """Deliver a batch's per-request results from `stage`; returns how
+        many messages were accepted on *every* successor edge.  All
+        messages must belong to one app (the scheduler's bucket key
+        guarantees it); `msgs` carry the source stage index — per-edge
+        copies are derived here via ``for_stage``."""
         if not msgs:
             return 0
         self._sync_buffers(buffers)
         app_id = msgs[0].app_id
-        hops = self.nm.next_hops(app_id, stage)
-        if not hops:
-            return 0
         wf = self.nm.workflows[app_id]
-        if stage == wf.stage_names()[-1]:
-            # final stage -> durable (transient) storage, retrievable by UID
+        succs = wf.successors(stage)
+        if not succs:
+            # terminal stage -> durable (transient) storage, keyed by UID
             if self.database is None:
                 return 0
+            ok = 0
             for m in msgs:
-                self.database.store(m.uid_hex, m.payload)
-            return len(msgs)
-        if len(msgs) == 1:
-            return 1 if self.router.send(hops, msgs[0], rr_key=app_id) is not None else 0
-        return self.router.send_many(hops, msgs, rr_key=app_id)
+                if self.joins is not None and \
+                        m.uid_hex in self.joins.dropped_uids:
+                    continue  # a sibling edge already dropped this request
+                try:
+                    self.database.store(m.uid_hex, m.payload)
+                except ConnectionError:
+                    # every replica down: a known terminal drop, not a
+                    # worker-killing error — account it like any other (§9)
+                    self.mark_dropped(m.uid_hex)
+                    continue
+                ok += 1
+            return ok
+        ok = [True] * len(msgs)
+        for succ in succs:
+            idx = wf.stage_index(succ)
+            deps = wf.deps_of(succ)
+            # A message dropped on an earlier edge is a dead request: do
+            # not fan it to the remaining edges — the whole downstream
+            # subgraph would run it only for a join/terminal to refuse it.
+            live = [i for i in range(len(msgs)) if ok[i]]
+            if not live:
+                break
+            if len(deps) > 1:
+                self._offer_fan_in(msgs, live, stage, succ, idx, deps, ok)
+                continue
+            # single-dep edge: one round-robin pick, one doorbell-batched
+            # append for the whole microbatch
+            hops = self.nm.stage_instances(succ)
+            out = [msgs[i].for_stage(idx) for i in live]
+            n = self._send_edge(hops, out, (app_id, succ))
+            for i in live[n:]:
+                ok[i] = False
+                self.mark_dropped(msgs[i].uid_hex)
+        return sum(ok)
+
+    def _send_edge(self, hops: List[str], out: List[WorkflowMessage],
+                   rr_key) -> int:
+        """One edge's append: a prefix of `out` lands on one round-robin
+        target (doorbell-batched for real batches); returns how many."""
+        if not hops:
+            return 0
+        if len(out) == 1:
+            return 1 if self.router.send(hops, out[0], rr_key=rr_key) \
+                is not None else 0
+        return self.router.send_many(hops, out, rr_key=rr_key)
+
+    def _offer_fan_in(self, msgs: List[WorkflowMessage], live: List[int],
+                      stage: str, succ: str, idx: int, deps: List[str],
+                      ok: List[bool]) -> None:
+        """Fan-in edge: offer each live partial to the join table; joins
+        completed by this batch ride one doorbell-batched append to the
+        fan-in stage, so microbatches re-coalesce past the join too."""
+        app_id = msgs[0].app_id
+        if self.joins is None:  # no assembler: partials can never join (§9)
+            for i in live:
+                ok[i] = False
+            return
+        completed: List[tuple] = []  # (msg index, assembled message)
+        for i in live:
+            m = msgs[i]
+            res = self.joins.offer(app_id, idx, m.uid_hex, stage,
+                                   m.payload, deps)
+            if res is JOIN_DEAD:
+                ok[i] = False
+            elif res is not JOIN_PENDING:
+                completed.append((i, m.for_stage(idx, res)))
+        if not completed:
+            return
+        hops = self.nm.stage_instances(succ)
+        n = self._send_edge(hops, [j for _, j in completed], (app_id, succ))
+        for i, _ in completed[n:]:
+            ok[i] = False
+            self.mark_dropped(msgs[i].uid_hex)
 
     def transport_stats(self) -> ChannelStats:
         return self.router.stats()
@@ -134,6 +217,7 @@ class WorkflowInstance:
         max_wait_s: float = 0.002,
         pad_to_full: bool = False,
         buffers: Optional[Dict[str, DoubleRingBuffer]] = None,
+        joins: Optional[JoinTable] = None,
     ):
         self.name = name
         self.fabric = fabric
@@ -154,7 +238,8 @@ class WorkflowInstance:
         )
         self.buffers = buffers if buffers is not None else {}
         self.buffers[name] = self.inbox
-        self.rd = ResultDeliver(fabric, name, nm, database, self.buffers)
+        self.rd = ResultDeliver(fabric, name, nm, database, self.buffers,
+                                joins=joins)
         self.stats = InstanceStats()
         self._queue: "queue.Queue[List[WorkflowMessage]]" = queue.Queue()
         self._stop = threading.Event()
@@ -201,6 +286,10 @@ class WorkflowInstance:
         for t in self._threads:
             t.join(timeout=2.0)
 
+    def _mark_dropped_msgs(self, msgs: List[WorkflowMessage]) -> None:
+        for m in msgs:
+            self.rd.mark_dropped(m.uid_hex)
+
     def drain_terminal(self) -> None:
         """Terminal accounting: whatever is still sitting in the worker queue
         or the inbox after the threads exit was admitted but will never be
@@ -211,14 +300,21 @@ class WorkflowInstance:
         drain, counted delivered but never processed."""
         while True:
             try:
-                self.stats.dropped += len(self._queue.get_nowait())
+                batch = self._queue.get_nowait()
             except queue.Empty:
                 break
+            self.stats.dropped += len(batch)
+            self._mark_dropped_msgs(batch)
         while True:
             item = self.inbox.poll()
             if item is None:
                 break
             self.stats.dropped += 1
+            if not isinstance(item, type(CORRUPT)):
+                try:  # best-effort UID ledger (corrupt entries carry none)
+                    self.rd.mark_dropped(WorkflowMessage.unpack(item).uid_hex)
+                except Exception:
+                    pass
 
     # ------------------------------------------------------------ manager
     def _refresh_assignment(self) -> None:
@@ -358,6 +454,7 @@ class WorkflowInstance:
         # would only lose them silently (§9: drops are fine, silent isn't).
         for _, batch in coalescer.flush_all():
             self.stats.dropped += len(batch)
+            self._mark_dropped_msgs(batch)
 
     # ------------------------------------------------------------- workers
     def _stage_name_of(self, msg: WorkflowMessage) -> Optional[str]:
@@ -425,6 +522,7 @@ class WorkflowInstance:
             fn = self._stage_callable(msgs[0])
             if fn is None:
                 self.stats.dropped += len(msgs)
+                self._mark_dropped_msgs(msgs)
                 continue
             t0 = time.monotonic()
             results = self._run_batch(fn, msgs)
@@ -434,7 +532,10 @@ class WorkflowInstance:
 
     def _deliver_results(self, msgs: List[WorkflowMessage],
                          results: List[Any]) -> None:
-        self.stats.dropped += sum(1 for r in results if r is _DROP)
+        for m, r in zip(msgs, results):
+            if r is _DROP:
+                self.stats.dropped += 1
+                self.rd.mark_dropped(m.uid_hex)
         pairs = [(m, r) for m, r in zip(msgs, results) if r is not _DROP]
         self.stats.processed += len(pairs)
         if not pairs:
@@ -446,8 +547,12 @@ class WorkflowInstance:
         stage = self._stage_name_of(pairs[0][0])
         if stage is None:
             self.stats.dropped += len(pairs)
+            self._mark_dropped_msgs([m for m, _ in pairs])
             return
-        out = [m.next_stage(r) for m, r in pairs]
+        # Keep the source stage index: ResultDeliver derives one per-edge
+        # copy per successor (the DAG fan-out), so results must not be
+        # pre-advanced to any particular next index here.
+        out = [m.for_stage(m.stage, r) for m, r in pairs]
         if len(out) == 1:
             ok = 1 if self.rd.deliver(out[0], stage, self.buffers) else 0
         else:
@@ -462,11 +567,13 @@ class WorkflowInstance:
         fn = self._stage_callable(msgs[0])
         if fn is None:
             self.stats.dropped += len(msgs)
+            self._mark_dropped_msgs(msgs)
             return
         try:
             payload, sizes = self._stack_batch(msgs)
         except Exception:
             self.stats.dropped += len(msgs)
+            self._mark_dropped_msgs(msgs)
             return
         partials: List[Any] = [None] * self.n_workers
         errors: List[bool] = [False] * self.n_workers
@@ -486,6 +593,7 @@ class WorkflowInstance:
         self.stats.busy_s += (time.monotonic() - t0) * self.n_workers
         if any(errors):
             self.stats.dropped += len(msgs)
+            self._mark_dropped_msgs(msgs)
             return
         self.stats.batches += 1
         try:
@@ -496,6 +604,7 @@ class WorkflowInstance:
             # account the drop rather than killing the scheduler thread —
             # _run_cm executes inline in _scheduler_loop.
             self.stats.dropped += len(msgs)
+            self._mark_dropped_msgs(msgs)
             return
         self._deliver_results(msgs, results)
 

@@ -25,9 +25,13 @@ a mid-flight reassignment safe — no message is ever routed to, or executed
 by, an instance under the wrong stage identity.
 
 Primary/backup replication with Paxos election lives in NMCluster.
-Workflows are DAG-free stage chains keyed by app_id; instance sharing (§8.3)
-falls out naturally: a stage name can appear in several workflows and its
-instances serve all of them.
+Workflows are stage **DAGs** keyed by app_id (docs/workflows.md): each
+``StageSpec`` may name its dependencies; ``deps=None`` defaults to the
+previous stage in the list, so every chain spec is unchanged.  Routing is
+per-edge (``successor_stages`` + ``stage_instances``); fan-in stages are
+assembled in the set-level JoinTable.  Instance sharing (§8.3) falls out
+naturally: a stage name can appear in several workflows and its instances
+serve all of them.
 """
 from __future__ import annotations
 
@@ -46,16 +50,96 @@ class StageSpec:
     fn: Optional[Callable] = None        # payload -> payload (user code)
     exec_time_s: float = 0.0             # pipelining hint (Theorem 1)
     mode: str = "IM"                     # IM | CM (§4.3)
+    # Upstream stage names.  None (default) = the previous stage in the
+    # workflow's stage list, so a plain list of StageSpecs stays the linear
+    # chain it always was.  [] = entrance stage (fed by the proxy); two or
+    # more names = fan-in stage assembled in the JoinTable.
+    deps: Optional[List[str]] = None
 
 
 @dataclass
 class WorkflowSpec:
+    """A workflow's stage DAG.  ``stages`` is frozen once the spec is
+    registered with a NodeManager — the derived shape (deps/successors/
+    index maps) is computed once and cached; routing hits it per message."""
+
     app_id: int
     name: str
     stages: List[StageSpec]
 
     def stage_names(self) -> List[str]:
         return [s.name for s in self.stages]
+
+    # ------------------------------------------------------------ DAG shape
+    def _shape(self) -> Tuple[Dict[str, List[str]], Dict[str, List[str]],
+                              Dict[str, int]]:
+        """(deps, successors, name->index), built once per spec."""
+        cache = self.__dict__.get("_shape_cache")
+        if cache is None:
+            deps: Dict[str, List[str]] = {}
+            for i, s in enumerate(self.stages):
+                if s.deps is None:
+                    deps[s.name] = [self.stages[i - 1].name] if i else []
+                else:
+                    deps[s.name] = list(s.deps)
+            succs: Dict[str, List[str]] = {s.name: [] for s in self.stages}
+            for s in self.stages:
+                for d in deps[s.name]:
+                    if d in succs:
+                        succs[d].append(s.name)
+            index = {s.name: i for i, s in enumerate(self.stages)}
+            cache = (deps, succs, index)
+            self.__dict__["_shape_cache"] = cache
+        return cache
+
+    def stage_index(self, name: str) -> int:
+        try:
+            return self._shape()[2][name]
+        except KeyError:
+            raise KeyError(f"stage {name!r} not in workflow {self.app_id}")
+
+    def resolved_deps(self) -> Dict[str, List[str]]:
+        """Per-stage dependency lists with the chain default applied:
+        ``deps=None`` means the previous stage ([] for the first)."""
+        return {k: list(v) for k, v in self._shape()[0].items()}
+
+    def deps_of(self, stage: str) -> List[str]:
+        return list(self._shape()[0][stage])
+
+    def successors(self, stage: str) -> List[str]:
+        """Downstream stages fed by `stage`, in definition order (the
+        per-edge fan-out set; empty for the terminal stage)."""
+        return list(self._shape()[1][stage])
+
+    def entrance_stages(self) -> List[str]:
+        """Stages with no dependencies — the proxy fans each admitted
+        request out to every one of them."""
+        deps = self._shape()[0]
+        return [s.name for s in self.stages if not deps[s.name]]
+
+    def terminal_stage(self) -> str:
+        """The unique sink whose output is the request's result."""
+        deps = self.resolved_deps()
+        fed = {d for ds in deps.values() for d in ds}
+        sinks = [s.name for s in self.stages if s.name not in fed]
+        if len(sinks) != 1:
+            raise ValueError(f"workflow {self.name!r} has sinks {sinks}; "
+                             "exactly one terminal stage is required")
+        return sinks[0]
+
+    def validate(self) -> None:
+        """Reject malformed specs at registration: duplicate/unknown stage
+        names, cycles, no entrance, or multiple sinks."""
+        names = self.stage_names()
+        if len(set(names)) != len(names):
+            raise ValueError(f"workflow {self.name!r} has duplicate stage names")
+        from repro.core.pipeline_planner import topo_sort
+
+        deps = self.resolved_deps()
+        topo_sort(deps)  # raises on unknown deps / cycles
+        if not self.entrance_stages():
+            raise ValueError(f"workflow {self.name!r} has no entrance stage")
+        self.terminal_stage()  # raises unless exactly one sink
 
 
 @dataclass
@@ -91,6 +175,7 @@ class NodeManager:
             self._topology_version += 1
 
     def register_workflow(self, wf: WorkflowSpec) -> None:
+        wf.validate()  # malformed DAGs (cycles, multi-sink) never enter routing
         with self._lock:
             self.workflows[wf.app_id] = wf
             # A new workflow changes routing (next_hops now resolve for its
@@ -169,16 +254,31 @@ class NodeManager:
             return [n for n, i in self.instances.items()
                     if i.stage is None and i.role == "workflow"]
 
-    def next_hops(self, app_id: int, stage: str) -> List[str]:
-        """Routing: instances of the next stage for this app (§4.5), or
-        ['__database__'] after the final stage."""
+    def successor_stages(self, app_id: int, stage: str) -> List[str]:
+        """Per-edge routing: the downstream stages fed by `stage` in this
+        app's DAG (empty for the terminal stage)."""
         with self._lock:
-            wf = self.workflows[app_id]
-            names = wf.stage_names()
-            idx = names.index(stage)
-            if idx + 1 >= len(names):
+            return self.workflows[app_id].successors(stage)
+
+    def stage_deps(self, app_id: int, stage: str) -> List[str]:
+        """The upstream stages a fan-in join must assemble before `stage`
+        can run (the JoinTable's ``expected`` set)."""
+        with self._lock:
+            return self.workflows[app_id].deps_of(stage)
+
+    def next_hops(self, app_id: int, stage: str) -> List[str]:
+        """Routing: the union of instances across `stage`'s successor
+        stages (§4.5) — one set per edge via ``successor_stages`` +
+        ``stage_instances`` — or the database instances after the terminal
+        stage."""
+        with self._lock:
+            succs = self.workflows[app_id].successors(stage)
+            if not succs:
                 return [n for n, i in self.instances.items() if i.role == "database"]
-            return self.stage_instances(names[idx + 1])
+            hops: List[str] = []
+            for s in succs:
+                hops.extend(n for n in self.stage_instances(s) if n not in hops)
+            return hops
 
     def location(self, name: str) -> str:
         with self._lock:
@@ -256,33 +356,55 @@ class NodeManager:
 
     # ----------------------------------------------------------- pipelining
     def plan_stage_instances(self, app_id: int, k_entrance: int = 1) -> Dict[str, int]:
-        """Theorem-1 instance counts for a workflow's chain."""
-        from repro.core.pipeline_planner import plan_chain
+        """Theorem-1 instance counts for a workflow — critical-path planning
+        (Theorem 1 applied per path) so DAG and chain specs both rate-match."""
+        from repro.core.pipeline_planner import plan_dag
 
         wf = self.workflows[app_id]
-        times = [max(s.exec_time_s, 1e-9) for s in wf.stages]
-        counts = plan_chain(times, k_entrance)
-        return dict(zip(wf.stage_names(), counts))
+        times = {s.name: max(s.exec_time_s, 1e-9) for s in wf.stages}
+        return plan_dag(times, wf.resolved_deps(), k_entrance)
 
     def entrance_capacity(self) -> Optional[Tuple[float, float]]:
         """Theorem-1 admissible capacity ``(t_entrance_s, k_entrance)`` from
-        *live* instance counts.  With one distinct entrance stage (shared
-        entrance stages count once, §8.3) this is the theorem's exact
-        (T_X, K); with several it degrades to ``(1.0, Σ k_i/t_i)`` — the
-        aggregate rate with the same ``k/t`` semantics."""
+        *live* instance counts.  A workflow's rate is the min over its
+        entrance stages of k_i/t_i (every admitted request is fanned out to
+        all of them).  Workflows sharing the same entrance set count once
+        (§8.3).  With one distinct entrance stage this is the theorem's
+        exact (T_X, K); otherwise it degrades to ``(1.0, Σ min_i k_i/t_i)``
+        — the aggregate rate with the same ``k/t`` semantics."""
         with self._lock:
-            entrances: Dict[str, float] = {}
+            # Entrance groups, merged transitively on any shared stage so a
+            # shared entrance's instances are never counted twice (§8.3):
+            # disjoint workflows contribute independent rate terms; a group
+            # with overlap is conservatively capped by its slowest member.
+            groups: List[Dict[str, float]] = []
             for wf in self.workflows.values():
-                if wf.stages:
-                    s0 = wf.stages[0]
-                    entrances[s0.name] = max(s0.exec_time_s, 1e-9)
-            if not entrances:
+                if not wf.stages:
+                    continue
+                merged = {
+                    n: max(wf.stages[wf.stage_index(n)].exec_time_s, 1e-9)
+                    for n in wf.entrance_stages()
+                }
+                rest = []
+                for g in groups:
+                    if set(g) & set(merged):
+                        # a stage declared by several workflows keeps its
+                        # slowest exec time — capacity must not depend on
+                        # registration order
+                        merged = {n: max(g.get(n, 0.0), merged.get(n, 0.0))
+                                  for n in set(g) | set(merged)}
+                    else:
+                        rest.append(g)
+                groups = rest + [merged]
+            if not groups:
                 return None
-            if len(entrances) == 1:
-                name, t = next(iter(entrances.items()))
+            if len(groups) == 1 and len(groups[0]) == 1:
+                name, t = next(iter(groups[0].items()))
                 return t, float(len(self.stage_instances(name)))
-            rate = sum(len(self.stage_instances(n)) / t
-                       for n, t in entrances.items())
+            rate = sum(
+                min(len(self.stage_instances(n)) / t for n, t in g.items())
+                for g in groups
+            )
             return 1.0, rate
 
     # --------------------------------------------------------- replication

@@ -4,13 +4,20 @@ entrance-stage injection over RDMA, result retrieval by UID.
 Entrance injection goes through the unified transport ``Router``: cached
 per-target channels, round-robin across entrance instances, bounded-retry
 then drop (§9), scatter-gather framing straight to the target ring.
+
+DAG workflows may have several entrance stages (docs/workflows.md): one
+admitted request = one UID = one admission token, fanned out as one message
+copy per entrance stage.  If any entrance append fails the request is
+rejected whole — the UID is tombstoned in the join table so branch copies
+that did land can never produce a partial result.
 """
 from __future__ import annotations
 
 import time
-from typing import Any, Dict, List, Optional
+from typing import Any, Dict, List, Optional, Tuple
 
 from repro.cluster.database import ReplicatedDatabase
+from repro.cluster.join import JoinTable
 from repro.cluster.node_manager import NodeManager
 from repro.core.messaging import WorkflowMessage
 from repro.core.rdma import RdmaFabric
@@ -33,6 +40,7 @@ class Proxy:
         buffers: Dict[str, DoubleRingBuffer],
         *,
         monitor: Optional[RequestMonitor] = None,
+        joins: Optional[JoinTable] = None,
     ):
         self.name = name
         self.fabric = fabric
@@ -40,41 +48,58 @@ class Proxy:
         self.database = database
         self.buffers = buffers
         self.monitor = monitor
+        self.joins = joins
         self.router = Router(name, buffers, nm=nm)
         nm.register_instance(name, role="proxy")
 
-    def _entrance_instances(self, app_id: int) -> List[str]:
+    def _entrances(self, app_id: int) -> List[Tuple[str, int, List[str]]]:
+        """Per entrance stage: (name, stage index, live instances).  Raises
+        fast-reject if any entrance stage has nowhere to land — a request
+        missing a branch could never complete its joins."""
         wf = self.nm.workflows[app_id]
-        entrance = wf.stage_names()[0]
-        return self.nm.stage_instances(entrance)
+        out = []
+        for stage in wf.entrance_stages():
+            instances = self.nm.stage_instances(stage)
+            if not instances:
+                raise Rejected(
+                    f"no instances for entrance stage {stage!r} of app {app_id}")
+            out.append((stage, wf.stage_index(stage), instances))
+        return out
+
+    def _mark_dropped(self, uid_hex: str) -> None:
+        if self.joins is not None:
+            self.joins.mark_dropped(uid_hex)
 
     def submit(self, app_id: int, payload: Any) -> str:
         """Admit (or fast-reject) a generation request; returns the UID the
-        client later polls with.  A request dropped at a full entrance ring
+        client later polls with.  One message copy is appended per entrance
+        stage (the DAG fan-out).  A request dropped at a full entrance ring
         is a *known* terminal drop — its in-flight token is released
-        immediately (downstream drops are invisible to the proxy and only
-        expire via the monitor's TTL)."""
-        instances = self._entrance_instances(app_id)
-        if not instances:
-            raise Rejected(f"no instances for entrance stage of app {app_id}")
+        immediately and the UID tombstoned, so branch copies that landed
+        before the failure die at their next join (downstream drops are
+        invisible to the proxy and only expire via the monitor's TTL)."""
+        entrances = self._entrances(app_id)
         if self.monitor is not None and not self.monitor.try_admit():
             raise Rejected(f"proxy {self.name} over admissible rate")
-        msg = WorkflowMessage.new(app_id=app_id, payload=payload, stage=0)
-        if self.router.send(instances, msg, rr_key=("entrance", app_id)) is None:
-            self.complete()  # never entered the pipeline
-            raise Rejected("entrance ring full")
-        return msg.uid_hex
+        base = WorkflowMessage.new(app_id=app_id, payload=payload,
+                                   stage=entrances[0][1])
+        for stage, idx, instances in entrances:
+            if self.router.send(instances, base.for_stage(idx),
+                                rr_key=("entrance", app_id, stage)) is None:
+                self._mark_dropped(base.uid_hex)
+                self.complete()  # never (fully) entered the pipeline
+                raise Rejected(f"entrance ring full for stage {stage!r}")
+        return base.uid_hex
 
     def submit_many(self, app_id: int, payloads: List[Any]) -> List[str]:
-        """Batched admission: one doorbell-batched ring append for the whole
-        burst.  Returns UIDs for the admitted-and-appended prefix.  Routing
-        is checked before any admission token is consumed; the dropped
-        suffix of a full entrance ring never entered the pipeline, so its
-        in-flight tokens are released on the spot (§9 still applies on the
-        wire: nothing is retransmitted)."""
-        instances = self._entrance_instances(app_id)
-        if not instances:
-            raise Rejected(f"no instances for entrance stage of app {app_id}")
+        """Batched admission: one doorbell-batched ring append per entrance
+        stage for the whole burst.  Returns UIDs for the prefix that landed
+        on *every* entrance branch.  Routing is checked before any
+        admission token is consumed; the dropped suffix never (fully)
+        entered the pipeline, so its in-flight tokens are released on the
+        spot and its UIDs tombstoned (§9 still applies on the wire:
+        nothing is retransmitted)."""
+        entrances = self._entrances(app_id)
         if self.monitor is not None:
             # Stop at the first rejection so the admitted set is a true
             # prefix of `payloads` — a mid-list reject (in-flight token
@@ -88,18 +113,36 @@ class Proxy:
             payloads = admitted
         if not payloads:
             return []
-        msgs = [WorkflowMessage.new(app_id=app_id, payload=p, stage=0)
+        base = [WorkflowMessage.new(app_id=app_id, payload=p,
+                                    stage=entrances[0][1])
                 for p in payloads]
-        n = self.router.send_many(instances, msgs, rr_key=("entrance", app_id))
-        for _ in msgs[n:]:
+        # Each branch's send_many lands a prefix; a request is admitted only
+        # if every branch landed it, so the admitted set is the min prefix.
+        # Later branches only receive the running-min prefix — copies past
+        # it are already doomed to the tombstone, so appending them would
+        # waste ring slots and full branch execution.
+        n = len(base)
+        for stage, idx, instances in entrances:
+            msgs = base[:n] if idx == entrances[0][1] else \
+                [m.for_stage(idx) for m in base[:n]]
+            n = min(n, self.router.send_many(instances, msgs,
+                                             rr_key=("entrance", app_id, stage)))
+        for m in base[n:]:
+            self._mark_dropped(m.uid_hex)
             self.complete()  # entrance-ring drop: token back
-        return [m.uid_hex for m in msgs[:n]]
+        return [m.uid_hex for m in base[:n]]
 
     def transport_stats(self) -> ChannelStats:
         return self.router.stats()
 
     def poll_result(self, uid: str) -> Optional[Any]:
-        return self.database.fetch(uid)
+        v = self.database.fetch(uid)
+        if v is not None:
+            # The one success the proxy can observe: the stored result was
+            # fetched (and purged), so release its in-flight token instead
+            # of leaving it to wedge admission until the TTL reclaims it.
+            self.complete()
+        return v
 
     def wait_result(self, uid: str, timeout_s: float = 10.0,
                     interval_s: float = 0.002) -> Any:

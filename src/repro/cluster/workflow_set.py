@@ -11,6 +11,7 @@ from typing import Any, Dict, List, Optional, Sequence
 
 from repro.cluster.database import DatabaseInstance, ReplicatedDatabase
 from repro.cluster.instance import WorkflowInstance
+from repro.cluster.join import JoinTable
 from repro.cluster.node_manager import (
     ControlLoop,
     NodeManager,
@@ -41,6 +42,9 @@ class WorkflowSet:
         for dbi in self.db_instances:
             self.nm.register_instance(dbi.name, role="database")
         self.database = ReplicatedDatabase(self.db_instances)
+        # Fan-in assembly + per-UID drop ledger, shared by every proxy and
+        # instance; partials replicate through the database write stream.
+        self.joins = JoinTable(self.database)
         self.proxies: List[Proxy] = []
         self._control_loop = control_loop
         self._control_interval_s = control_interval_s
@@ -54,7 +58,7 @@ class WorkflowSet:
         inst = WorkflowInstance(
             f"{self.name}.{name}", self.fabric, self.nm,
             n_workers=n_workers, mode=mode, database=self.database,
-            buffers=self.buffers, **kw,
+            buffers=self.buffers, joins=self.joins, **kw,
         )
         self.instances[inst.name] = inst
         if stage is not None:
@@ -63,7 +67,7 @@ class WorkflowSet:
 
     def add_proxy(self, name: str, *, monitor: Optional[RequestMonitor] = None) -> Proxy:
         p = Proxy(f"{self.name}.{name}", self.fabric, self.nm, self.database,
-                  self.buffers, monitor=monitor)
+                  self.buffers, monitor=monitor, joins=self.joins)
         self.proxies.append(p)
         return p
 
@@ -80,6 +84,14 @@ class WorkflowSet:
         for inst in self.instances.values():
             total = total.merge(inst.rd.transport_stats())
         return total
+
+    def dead_uids(self) -> set:
+        """Per-request §9 reconciliation (docs/workflows.md): UIDs any drop
+        site tombstoned, plus UIDs stranded mid-join (a sibling branch was
+        lost on the wire without its UID ever being decodable).  After the
+        set has quiesced, ``submitted == stored ∪ dead_uids()`` — exactly
+        one joined result per surviving UID, none partial."""
+        return self.joins.dropped_snapshot() | self.joins.pending_uids()
 
     # ----------------------------------------------------------- lifecycle
     def start(self) -> None:
@@ -140,3 +152,38 @@ class MultiSetFrontend:
                 last_err = e
                 continue
         raise last_err or Rejected("no sets available")
+
+    def submit_many(self, app_id: int, payloads: Sequence[Any]) -> List[tuple]:
+        """Batched spreading: the burst goes to a random set's proxy via its
+        doorbell-batched ``submit_many``; whatever that set fast-rejects or
+        drops spills over to the next set.  Returns ``(set, uid)`` pairs
+        aligned with the admitted prefix of ``payloads`` — like ``submit``,
+        callers poll each UID against the set that admitted it."""
+        remaining = list(payloads)
+        placed: List[tuple] = []
+        last_err: Optional[Exception] = None
+        for i in self.rng.sample(range(len(self.sets)), len(self.sets)):
+            if not remaining:
+                break
+            ws = self.sets[i]
+            if not ws.proxies:
+                continue
+            proxy = self.rng.choice(ws.proxies)
+            try:
+                uids = proxy.submit_many(app_id, remaining)
+            except Rejected as e:
+                last_err = e
+                continue
+            placed.extend((ws, u) for u in uids)
+            remaining = remaining[len(uids):]
+        if not placed and remaining:
+            raise last_err or Rejected("no sets available")
+        return placed
+
+    def transport_stats(self) -> ChannelStats:
+        """Aggregated data-plane totals across every member set — the
+        multi-set analogue of ``WorkflowSet.transport_stats``."""
+        total = ChannelStats()
+        for ws in self.sets:
+            total = total.merge(ws.transport_stats())
+        return total

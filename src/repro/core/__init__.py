@@ -20,11 +20,15 @@ from repro.core.ring_buffer import CORRUPT, AppendOp, Corrupt, DoubleRingBuffer,
 from repro.core.messaging import HEADER_BYTES, WorkflowMessage
 from repro.core.transport import Channel, ChannelStats, Router
 from repro.core.pipeline_planner import (
+    critical_path,
     offered_rate,
     plan_chain,
+    plan_dag,
     required_instances,
+    simulate_dag,
     simulate_pipeline,
     steady_state_latency,
+    topo_sort,
 )
 from repro.core.request_monitor import RequestMonitor
 
@@ -49,11 +53,15 @@ __all__ = [
     "TcpCostModel",
     "WorkflowMessage",
     "bucket_key",
+    "critical_path",
     "offered_rate",
     "stack_payloads",
     "unstack_payload",
     "plan_chain",
+    "plan_dag",
     "required_instances",
+    "simulate_dag",
     "simulate_pipeline",
     "steady_state_latency",
+    "topo_sort",
 ]

@@ -26,6 +26,8 @@ _KIND_BYTES = 0
 _KIND_TENSOR = 1
 _KIND_JSONTREE = 2
 
+_KEEP = object()  # for_stage default: carry this message's payload unchanged
+
 
 Buf = Union[bytes, bytearray, memoryview]
 
@@ -172,4 +174,14 @@ class WorkflowMessage:
         return WorkflowMessage(
             uid=self.uid, timestamp=self.timestamp, app_id=self.app_id,
             stage=self.stage + 1, payload=payload,
+        )
+
+    def for_stage(self, stage: int, payload: Payload = _KEEP) -> "WorkflowMessage":
+        """Per-edge copy for DAG routing: same identity (UID, proxy
+        timestamp), explicit target stage index.  Fan-out derives one copy
+        per successor edge; a fan-in join derives the assembled message."""
+        return WorkflowMessage(
+            uid=self.uid, timestamp=self.timestamp, app_id=self.app_id,
+            stage=stage,
+            payload=self.payload if payload is _KEEP else payload,
         )

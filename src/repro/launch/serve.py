@@ -1,12 +1,22 @@
 """Serving launcher: stand up a complete OnePiece Workflow Set around the
 Wan-style I2V pipeline and push batched requests through it.
 
-    PYTHONPATH=src python -m repro.launch.serve --requests 8 --diff-instances 3
+    PYTHONPATH=src python -m repro.launch.serve --requests 8
+    PYTHONPATH=src python -m repro.launch.serve --workflow dag
+    PYTHONPATH=src python -m repro.launch.serve --workflow a2v
 
 This is the paper's deployment in miniature: proxies with fast-reject,
 Theorem-1-planned per-stage instance counts, one-sided-RDMA ring-buffer
 transport between stages, NodeManager elastic reassignment, transient
 replicated result storage.
+
+Workflows (docs/workflows.md):
+  * chain — the linear 4-stage pipeline (text -> vae -> dit -> decode);
+  * dag   — the paper's real Wan2.1 topology: text encoder ∥ image/VAE
+            encoder as independent branches joining into the DiT
+            (bit-identical output, critical-path latency);
+  * a2v   — audio-to-video: asr -> (llm -> text_encode) ∥ image_encode
+            -> diffusion -> vae_decode, a nested two-branch DAG.
 """
 from __future__ import annotations
 
@@ -16,24 +26,120 @@ import time
 import numpy as np
 
 from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
-from repro.core import RequestMonitor, plan_chain
-from repro.models.aigc import WanI2VPipeline, build_stage_fns
+from repro.core import RequestMonitor, critical_path, plan_dag
+from repro.models.aigc import (
+    DAG_DEPS,
+    WanI2VPipeline,
+    build_dag_stage_fns,
+    build_stage_fns,
+)
 from repro.models.aigc.pipeline import measure_stage_times
 
 APP_I2V = 1
 STAGES = ("text_encode", "vae_encode", "diffusion", "vae_decode")
 
 
-def build_set(pipe: WanI2VPipeline, *, counts, admit_rate: float,
+def build_a2v_stage_fns(pipe: WanI2VPipeline):
+    """Toy ASR/LLM front stages (deterministic numpy transforms standing in
+    for Whisper and a prompt-rewriting LLM) feeding the real Wan DAG."""
+    cfg = pipe.cfg
+    dag = build_dag_stage_fns(pipe)
+
+    def stage_asr(p):
+        audio = np.asarray(p["audio"])  # [B, n] waveform
+        toks = (np.abs(audio[:, :cfg.text_len]) * 997.0).astype(np.int64)
+        return {"tokens": (toks % cfg.text_vocab).astype(np.int32),
+                "image": p["image"], "seed": p["seed"]}
+
+    def stage_llm(p):
+        # image/seed ride along: the downstream text_encode wraps the
+        # chain stage fn, whose payload contract includes them
+        toks = np.asarray(p["tokens"]).astype(np.int64)
+        return {"tokens": ((toks * 31 + 7) % cfg.text_vocab).astype(np.int32),
+                "image": p["image"], "seed": p["seed"]}
+
+    return {
+        "asr": stage_asr,
+        "llm": stage_llm,
+        "text_encode": dag["text_encode"],
+        "image_encode": dag["image_encode"],
+        "diffusion": dag["diffusion"],
+        "vae_decode": dag["vae_decode"],
+    }
+
+
+A2V_DEPS = {
+    "asr": [],
+    "llm": ["asr"],
+    "text_encode": ["llm"],
+    "image_encode": ["asr"],
+    "diffusion": ["text_encode", "image_encode"],
+    "vae_decode": ["diffusion"],
+}
+
+
+def workflow_spec(workflow: str, pipe: WanI2VPipeline):
+    """-> (WorkflowSpec, stage_times dict) for a named scenario."""
+    times = measure_stage_times(pipe)
+    if workflow == "chain":
+        fns = build_stage_fns(pipe)
+        spec = WorkflowSpec(APP_I2V, "wan-i2v", [
+            StageSpec(s, fn=fns[s], exec_time_s=times[s]) for s in STAGES
+        ])
+        return spec, {s: times[s] for s in STAGES}
+    if workflow == "dag":
+        fns = build_dag_stage_fns(pipe)
+        dag_times = {"text_encode": times["text_encode"],
+                     "image_encode": times["vae_encode"],
+                     "diffusion": times["diffusion"],
+                     "vae_decode": times["vae_decode"]}
+        spec = WorkflowSpec(APP_I2V, "wan-i2v-dag", [
+            StageSpec(s, fn=fns[s], exec_time_s=dag_times[s],
+                      deps=DAG_DEPS[s])
+            for s in DAG_DEPS
+        ])
+        return spec, dag_times
+    if workflow == "a2v":
+        fns = build_a2v_stage_fns(pipe)
+        # The toy asr/llm are near-free; planning them at their real
+        # (~µs) cost would make them the pacing entrance and blow the
+        # per-path Theorem-1 counts up to T_dit/T_asr instances.  Budget
+        # them like light encoder stages instead.
+        a2v_times = {"asr": times["text_encode"], "llm": times["text_encode"],
+                     "text_encode": times["text_encode"],
+                     "image_encode": times["vae_encode"],
+                     "diffusion": times["diffusion"],
+                     "vae_decode": times["vae_decode"]}
+        spec = WorkflowSpec(APP_I2V, "audio2video", [
+            StageSpec(s, fn=fns[s], exec_time_s=a2v_times[s],
+                      deps=A2V_DEPS[s])
+            for s in A2V_DEPS
+        ])
+        return spec, a2v_times
+    raise ValueError(f"unknown workflow {workflow!r}")
+
+
+def make_request(workflow: str, cfg, rng, i: int):
+    req = {
+        "tokens": rng.integers(0, cfg.text_vocab,
+                               (1, cfg.text_len)).astype(np.int32),
+        "image": (rng.standard_normal(
+            (1, cfg.image_size, cfg.image_size, 3)) * 0.1).astype(np.float32),
+        "seed": i,
+    }
+    if workflow == "a2v":
+        del req["tokens"]
+        req["audio"] = rng.standard_normal(
+            (1, cfg.text_len * 2)).astype(np.float32)
+    return req
+
+
+def build_set(spec: WorkflowSpec, *, counts, admit_rate: float,
               name: str = "ws0", max_batch: int = 1,
               max_wait_s: float = 0.02, elastic: bool = True,
               spares: int = 0) -> WorkflowSet:
-    fns = build_stage_fns(pipe)
-    times = measure_stage_times(pipe)
     ws = WorkflowSet(name, control_loop=elastic)
-    ws.register_workflow(WorkflowSpec(APP_I2V, "wan-i2v", [
-        StageSpec(s, fn=fns[s], exec_time_s=times[s]) for s in STAGES
-    ]))
+    ws.register_workflow(spec)
     for stage, n in counts.items():
         for i in range(n):
             ws.add_instance(f"{stage}_{i}", stage=stage, max_batch=max_batch,
@@ -54,6 +160,10 @@ def main() -> int:
     ap.add_argument("--requests", type=int, default=8)
     ap.add_argument("--profile", default="small", choices=["small"])
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--workflow", default="chain",
+                    choices=["chain", "dag", "a2v"],
+                    help="stage topology: linear chain, the branch-parallel "
+                         "Wan DAG, or the nested audio-to-video DAG")
     ap.add_argument("--plan-by-theorem1", action="store_true", default=True)
     ap.add_argument("--max-batch", type=int, default=1,
                     help="stage-level microbatch size (1 = per-request)")
@@ -68,17 +178,19 @@ def main() -> int:
 
     pipe = WanI2VPipeline(seed=args.seed)
     cfg = pipe.cfg
-    times = measure_stage_times(pipe)
+    spec, times = workflow_spec(args.workflow, pipe)
     print("stage times (s):", {k: round(v, 4) for k, v in times.items()})
 
-    # Theorem 1: instance counts that rate-match the entrance stage
-    chain = [times[s] for s in STAGES]
-    plan = plan_chain(chain, k_entrance=1)
-    counts = dict(zip(STAGES, plan))
+    # Theorem 1 per path: instance counts that rate-match the entrance
+    deps = spec.resolved_deps()
+    counts = plan_dag(times, deps, k_entrance=1)
     print("Theorem-1 plan:", counts)
+    cp_latency, cp = critical_path(times, deps)
+    print(f"critical path: {' -> '.join(cp)} = {cp_latency:.4f}s "
+          f"(serialized sum {sum(times.values()):.4f}s)")
 
-    admit_rate = 1.0 / chain[0]
-    ws = build_set(pipe, counts=counts, admit_rate=admit_rate,
+    entrance_t = max(times[s] for s in spec.entrance_stages())
+    ws = build_set(spec, counts=counts, admit_rate=1.0 / entrance_t,
                    max_batch=args.max_batch,
                    max_wait_s=args.batch_wait_ms / 1e3,
                    elastic=not args.no_elastic,
@@ -89,13 +201,8 @@ def main() -> int:
     t0 = time.time()
     uids = []
     with ws:
-        reqs = []
-        for i in range(args.requests):
-            tokens = rng.integers(0, cfg.text_vocab,
-                                  (1, cfg.text_len)).astype(np.int32)
-            image = (rng.standard_normal(
-                (1, cfg.image_size, cfg.image_size, 3)) * 0.1).astype(np.float32)
-            reqs.append({"tokens": tokens, "image": image, "seed": i})
+        reqs = [make_request(args.workflow, cfg, rng, i)
+                for i in range(args.requests)]
         if args.max_batch > 1:
             uids = proxy.submit_many(APP_I2V, reqs)  # one doorbell-batched burst
             if len(uids) < len(reqs):
@@ -128,6 +235,10 @@ def main() -> int:
         print(f"{len(videos)} videos of shape {videos[0].shape} in {wall:.2f}s "
               f"({len(videos)/wall:.2f} req/s)")
     print("per-instance processed:", per_stage)
+    js = ws.joins.stats
+    if js.offered:
+        print(f"joins: {js.completed} assembled from {js.offered} partials, "
+              f"{js.aborted_joins} aborted, pending={ws.joins.pending_joins()}")
     if ws.control is not None:
         print(f"control loop: {ws.control.steps} ticks, "
               f"moves={ws.control.moves}, evicted={ws.control.evicted}, "

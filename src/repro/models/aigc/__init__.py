@@ -7,6 +7,12 @@ Each stage is a self-contained JAX model so the cluster layer can place them
 on separate workflow instances and move tensors between them as
 WorkflowMessages over the RDMA fabric.
 """
-from repro.models.aigc.pipeline import WanI2VPipeline, build_stage_fns
+from repro.models.aigc.pipeline import (
+    DAG_DEPS,
+    WanI2VPipeline,
+    build_dag_stage_fns,
+    build_stage_fns,
+)
 
-__all__ = ["WanI2VPipeline", "build_stage_fns"]
+__all__ = ["DAG_DEPS", "WanI2VPipeline", "build_dag_stage_fns",
+           "build_stage_fns"]

@@ -150,6 +150,49 @@ def build_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
     }
 
 
+#: The paper's real Wan2.1 I2V topology (§2.4): the text encoder and the
+#: image/VAE encoder are independent branches off the client request that
+#: merge into the DiT.  ``build_dag_stage_fns`` payloads are arranged so the
+#: JoinTable's dict-union merge hands ``diffusion`` exactly the payload the
+#: linear chain produced — DAG output is bit-identical to the chain.
+DAG_DEPS = {
+    "text_encode": [],
+    "image_encode": [],
+    "diffusion": ["text_encode", "image_encode"],
+    "vae_decode": ["diffusion"],
+}
+
+
+def build_dag_stage_fns(pipe: WanI2VPipeline) -> Dict[str, Callable]:
+    """Stage callables for the branch-parallel Wan I2V DAG.  Payload schema
+    (client request is fanned out to both entrance stages):
+       client -> text_encode:  {tokens, image, seed} -> {text_emb}
+       client -> image_encode: {tokens, image, seed} -> {z_tokens, seed}
+       join   -> diffusion:    {text_emb, z_tokens, seed} -> {latents}
+              -> vae_decode:   frames ndarray -> database
+    The branch stages *wrap* the chain stages (projecting away the keys
+    the other branch supplies) rather than reimplementing them — one
+    source of truth, so the two topologies stay byte-identical by
+    construction."""
+    chain = build_stage_fns(pipe)
+
+    def stage_text(p):
+        return {"text_emb": chain["text_encode"](p)["text_emb"]}
+
+    def stage_image(p):
+        # the chain's vae_encode only threads text_emb through; the join
+        # supplies the real one from the text branch
+        out = chain["vae_encode"]({**p, "text_emb": None})
+        return {"z_tokens": out["z_tokens"], "seed": out["seed"]}
+
+    return {
+        "text_encode": stage_text,
+        "image_encode": stage_image,
+        "diffusion": chain["diffusion"],
+        "vae_decode": chain["vae_decode"],
+    }
+
+
 def measure_stage_times(pipe: WanI2VPipeline, batch: int = 1,
                         n_warm: int = 1, n_iter: int = 3) -> Dict[str, float]:
     """Per-stage wall times — feeds Theorem-1 planning and the 16x benchmark."""

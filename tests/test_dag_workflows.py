@@ -1,0 +1,731 @@
+"""DAG workflows (docs/workflows.md): fan-out/fan-in routing, join
+assembly, per-request drop accounting — exercised by spec/planner unit
+tests, end-to-end DAG execution, a seeded property/fuzz suite over random
+DAG shapes (2-5 branches, nested fan-in, mid-join drain reassignment), and
+fault injection (branch appends lost mid-writev, join-owner eviction).
+
+Run this file alone with ``scripts/check.sh --dag``.
+"""
+from __future__ import annotations
+
+import random
+import time
+
+import numpy as np
+import pytest
+
+from repro.cluster import (
+    DatabaseInstance,
+    JoinTable,
+    JOIN_DEAD,
+    JOIN_PENDING,
+    MultiSetFrontend,
+    NodeManager,
+    Rejected,
+    ReplicatedDatabase,
+    StageSpec,
+    WorkflowSet,
+    WorkflowSpec,
+)
+from repro.core import (
+    RequestMonitor,
+    critical_path,
+    plan_chain,
+    plan_dag,
+    simulate_dag,
+    simulate_pipeline,
+    topo_sort,
+)
+
+
+def _wait_until(pred, timeout_s: float = 5.0, interval_s: float = 0.005) -> bool:
+    deadline = time.monotonic() + timeout_s
+    while time.monotonic() < deadline:
+        if pred():
+            return True
+        time.sleep(interval_s)
+    return pred()
+
+
+def _quiesce(ws, proxy, uids, timeout_s: float = 15.0):
+    """Wait until every UID is stored or terminally accounted; returns
+    {uid: result} for the stored ones.
+
+    A UID in ``joins.dropped_uids`` is definitively dead.  A UID merely in
+    ``pending_uids()`` may still be mid-join, so stranded partials (their
+    sibling was lost on the wire with no decodable UID) only count as
+    settled once the whole set has made no progress for a full second."""
+    results = {}
+    snap = {"state": None, "since": time.monotonic()}
+
+    def settled():
+        for u in uids:
+            if u not in results:
+                v = proxy.poll_result(u)
+                if v is not None:
+                    results[u] = v
+        if set(results) | ws.joins.dropped_uids >= set(uids):
+            return True
+        state = (len(results), frozenset(ws.joins.pending_uids()),
+                 tuple(sorted((n, i.stats.processed, i.stats.dropped)
+                              for n, i in ws.instances.items())))
+        now = time.monotonic()
+        if state != snap["state"]:
+            snap["state"], snap["since"] = state, now
+            return False
+        return now - snap["since"] >= 1.0
+
+    _wait_until(settled, timeout_s=timeout_s, interval_s=0.02)
+    return results
+
+
+# =========================================================== spec & model
+def test_chain_spec_defaults_to_linear_deps():
+    wf = WorkflowSpec(1, "chain", [StageSpec("a"), StageSpec("b"),
+                                   StageSpec("c")])
+    assert wf.resolved_deps() == {"a": [], "b": ["a"], "c": ["b"]}
+    assert wf.entrance_stages() == ["a"]
+    assert wf.terminal_stage() == "c"
+    assert wf.successors("a") == ["b"] and wf.successors("c") == []
+    wf.validate()  # a plain chain is always a valid DAG
+
+
+def test_dag_spec_shape_queries():
+    wf = WorkflowSpec(1, "wan", [
+        StageSpec("text", deps=[]),
+        StageSpec("image", deps=[]),
+        StageSpec("dit", deps=["text", "image"]),
+        StageSpec("decode", deps=["dit"]),
+    ])
+    wf.validate()
+    assert wf.entrance_stages() == ["text", "image"]
+    assert wf.terminal_stage() == "decode"
+    assert wf.successors("text") == ["dit"]
+    assert wf.deps_of("dit") == ["text", "image"]
+    assert wf.stage_index("dit") == 2
+
+
+@pytest.mark.parametrize("stages,err", [
+    ([StageSpec("a"), StageSpec("a")], "duplicate"),                # dup names
+    ([StageSpec("a", deps=["ghost"])], "unknown"),                  # bad dep
+    ([StageSpec("a", deps=["b"]), StageSpec("b", deps=["a"])], "cycle"),
+    ([StageSpec("a", deps=[]), StageSpec("b", deps=["a"]),
+      StageSpec("c", deps=["a"])], "sinks"),                        # two sinks
+])
+def test_dag_spec_validation_rejects_malformed(stages, err):
+    with pytest.raises(ValueError, match=err):
+        WorkflowSpec(1, "bad", stages).validate()
+
+
+def test_register_workflow_validates():
+    nm = NodeManager()
+    with pytest.raises(ValueError):
+        nm.register_workflow(WorkflowSpec(1, "bad", [
+            StageSpec("a", deps=["b"]), StageSpec("b", deps=["a"]),
+        ]))
+    assert 1 not in nm.workflows  # nothing half-registered
+
+
+def test_next_hops_per_edge_and_terminal():
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "wan", [
+        StageSpec("text", deps=[]),
+        StageSpec("image", deps=[]),
+        StageSpec("dit", deps=["text", "image"]),
+        StageSpec("decode", deps=["dit"]),
+    ]))
+    for name, stage in [("t0", "text"), ("i0", "image"), ("d0", "dit"),
+                        ("d1", "dit"), ("v0", "decode")]:
+        nm.register_instance(name)
+        nm.assign(name, stage)
+    nm.register_instance("db0", role="database")
+    assert nm.successor_stages(1, "text") == ["dit"]
+    assert nm.stage_deps(1, "dit") == ["text", "image"]
+    assert set(nm.next_hops(1, "image")) == {"d0", "d1"}
+    assert nm.next_hops(1, "decode") == ["db0"]  # terminal -> database
+
+
+def test_next_hops_union_over_fanout_edges():
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "diamond", [
+        StageSpec("a"),
+        StageSpec("b", deps=["a"]),
+        StageSpec("c", deps=["a"]),
+        StageSpec("d", deps=["b", "c"]),
+    ]))
+    for name, stage in [("b0", "b"), ("c0", "c")]:
+        nm.register_instance(name)
+        nm.assign(name, stage)
+    assert set(nm.next_hops(1, "a")) == {"b0", "c0"}  # both edges
+
+
+# ================================================================ planner
+def test_plan_dag_matches_plan_chain_on_chains():
+    times = [1.0, 12.0, 2.0]
+    wf = WorkflowSpec(1, "chain", [
+        StageSpec(s, exec_time_s=t)
+        for s, t in zip(("prep", "diffusion", "decode"), times)
+    ])
+    got = plan_dag({s.name: s.exec_time_s for s in wf.stages},
+                   wf.resolved_deps(), 2)
+    assert got == dict(zip(("prep", "diffusion", "decode"),
+                           plan_chain(times, 2)))
+
+
+def test_plan_dag_branches_rate_match_slowest_entrance():
+    times = {"text": 2.0, "image": 1.0, "dit": 96.0, "decode": 5.0}
+    deps = {"text": [], "image": [], "dit": ["text", "image"],
+            "decode": ["dit"]}
+    plan = plan_dag(times, deps, 2)
+    # T_0 = 2.0 (slowest entrance): every stage matches rate K/T_0 = 1/s
+    assert plan == {"text": 2, "image": 1, "dit": 96, "decode": 5}
+    r = simulate_dag(times, deps, plan, n_requests=60, arrival_period=1.0)
+    assert r.rate_matched and r.max_queue_depth == 0
+
+
+def test_critical_path_vs_serialized_sum():
+    times = {"text": 2.0, "image": 1.0, "dit": 96.0, "decode": 5.0}
+    deps = {"text": [], "image": [], "dit": ["text", "image"],
+            "decode": ["dit"]}
+    latency, path = critical_path(times, deps)
+    assert path == ["text", "dit", "decode"]
+    assert latency == 103.0 < sum(times.values())  # image hides under text
+    with pytest.raises(ValueError, match="cycle"):
+        topo_sort({"a": ["b"], "b": ["a"]})
+
+
+def test_simulate_dag_branch_parallel_beats_serialized_chain():
+    times = {"a": 4.0, "b": 4.0, "join": 1.0}
+    deps = {"a": [], "b": [], "join": ["a", "b"]}
+    dag = simulate_dag(times, deps, {"a": 1, "b": 1, "join": 1},
+                       n_requests=20, arrival_period=4.0)
+    chain = simulate_pipeline([4.0, 4.0, 1.0], [1, 1, 1],
+                              n_requests=20, arrival_period=4.0)
+    assert max(dag.latencies) == 5.0       # max(4,4) + 1: branches overlap
+    assert max(chain.latencies) == 9.0     # 4 + 4 + 1: serialized
+    assert dag.rate_matched
+
+
+def test_entrance_capacity_is_min_over_branches():
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "wan", [
+        StageSpec("text", exec_time_s=2.0, deps=[]),
+        StageSpec("image", exec_time_s=1.0, deps=[]),
+        StageSpec("dit", exec_time_s=4.0, deps=["text", "image"]),
+    ]))
+    for name, stage in [("t0", "text"), ("t1", "text"), ("i0", "image")]:
+        nm.register_instance(name)
+        nm.assign(name, stage)
+    t, k = nm.entrance_capacity()
+    # text: 2/2.0 = 1/s, image: 1/1.0 = 1/s -> min rate 1/s
+    assert k / t == pytest.approx(1.0)
+
+
+def test_entrance_capacity_shared_entrance_counted_once():
+    """Workflows with overlapping (but unequal) entrance sets share stage
+    A's instances — the capacity sum must not count them twice (§8.3)."""
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "w1", [
+        StageSpec("A", exec_time_s=1.0, deps=[]),
+        StageSpec("out1", deps=["A"]),
+    ]))
+    nm.register_workflow(WorkflowSpec(2, "w2", [
+        StageSpec("A", exec_time_s=1.0, deps=[]),
+        StageSpec("B", exec_time_s=1.0, deps=[]),
+        StageSpec("j", deps=["A", "B"]),
+    ]))
+    for name, stage in [("a0", "A"), ("a1", "A"), ("b0", "B")]:
+        nm.register_instance(name)
+        nm.assign(name, stage)
+    t, k = nm.entrance_capacity()
+    # one merged group {A, B}: conservatively min(2/1, 1/1), not 2 + 1
+    assert k / t == pytest.approx(1.0)
+
+
+def test_dead_message_not_fanned_to_remaining_edges():
+    """A message dropped on one fan-out edge is a dead request: the later
+    edges must not run the rest of the subgraph for it."""
+    ws = WorkflowSet("deadfan", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "df", [
+        StageSpec("src", fn=lambda p: {"x": p["x"]}, exec_time_s=1e-3),
+        StageSpec("e1", fn=lambda p: p, exec_time_s=1e-3, deps=["src"]),
+        StageSpec("e2", fn=lambda p: p, exec_time_s=1e-3, deps=["src"]),
+        StageSpec("j", fn=lambda p: p, exec_time_s=1e-3, deps=["e1", "e2"]),
+    ]))
+    ws.add_instance("s0", stage="src")
+    ws.add_instance("e2i", stage="e2")  # e1 has NO instances: edge drops
+    ws.add_instance("j0", stage="j")
+    p = ws.add_proxy("p0")
+    with ws:
+        uid = p.submit(1, {"x": 1.0})
+        assert _wait_until(lambda: uid in ws.joins.dropped_uids, timeout_s=5)
+        time.sleep(0.05)
+    assert ws.instances["deadfan.e2i"].stats.processed == 0  # edge skipped
+    assert ws.joins.stats.offered == 0  # nothing half-joined downstream
+
+
+# ============================================================== join table
+def test_join_offer_completes_in_dep_order():
+    jt = JoinTable()
+    assert jt.offer(1, 2, "u1", "b", {"k": 9}, ["a", "b"]) is JOIN_PENDING
+    merged = jt.offer(1, 2, "u1", "a", {"k": 1, "x": 2}, ["a", "b"])
+    # merge in dependency order: b's partial overwrites a's on conflict
+    assert merged == {"k": 9, "x": 2}
+    assert jt.stats.completed == 1 and jt.pending_joins() == 0
+
+
+def test_join_non_dict_partials_keyed_by_branch():
+    jt = JoinTable()
+    jt.offer(1, 0, "u", "a", 41.0, ["a", "b"])
+    merged = jt.offer(1, 0, "u", "b", {"x": 1}, ["a", "b"])
+    assert merged == {"a": 41.0, "b": {"x": 1}}
+
+
+def test_join_mark_dropped_tombstones_and_discards():
+    jt = JoinTable()
+    jt.offer(1, 0, "u", "a", {"a": 1}, ["a", "b"])
+    assert jt.mark_dropped("u") is True
+    assert jt.mark_dropped("u") is False       # counted once per request
+    assert jt.pending_joins() == 0             # sibling partial discarded
+    assert jt.offer(1, 0, "u", "b", {"b": 2}, ["a", "b"]) is JOIN_DEAD
+    assert jt.stats.aborted_joins == 1 and jt.stats.discarded_partials == 1
+
+
+def test_join_partials_replicate_and_claim_purges():
+    dbs = [DatabaseInstance("d0"), DatabaseInstance("d1")]
+    jt = JoinTable(ReplicatedDatabase(dbs))
+    jt.offer(7, 3, "u", "a", {"a": 1}, ["a", "b"])
+    key = "join/7/3/u/a"
+    assert all(db.scan("join/") == {key: {"a": 1}} for db in dbs)
+    jt.offer(7, 3, "u", "b", {"b": 2}, ["a", "b"])
+    assert all(db.scan("join/") == {} for db in dbs)  # claimed atomically
+
+
+def test_join_recover_rebuilds_from_replicas():
+    rd = ReplicatedDatabase([DatabaseInstance("d0"), DatabaseInstance("d1")])
+    jt = JoinTable(rd)
+    jt.offer(1, 2, "u", "a", {"a": 1}, ["a", "b"])
+    fresh = JoinTable(rd)  # the assembler restarted and lost its memory
+    assert fresh.recover() == (1, [])
+    assert fresh.pending_uids() == {"u"}
+    merged = fresh.offer(1, 2, "u", "b", {"b": 2}, ["a", "b"])
+    assert merged == {"a": 1, "b": 2}
+
+
+def test_join_recover_completes_fully_recovered_joins():
+    """The last branch can land while the assembler's memory is gone: both
+    partials then live only in the replicas, and no future offer will ever
+    arrive — recover(nm) must claim and hand back the assembled join."""
+    nm = NodeManager()
+    nm.register_workflow(WorkflowSpec(1, "wf", [
+        StageSpec("a", deps=[]), StageSpec("b", deps=[]),
+        StageSpec("j", deps=["a", "b"]),
+    ]))
+    rd = ReplicatedDatabase([DatabaseInstance("d0"), DatabaseInstance("d1")])
+    jt = JoinTable(rd)
+    jt.offer(1, 2, "u", "a", {"a": 1}, ["a", "b"])
+    lost = JoinTable(rd)  # assembler restarts between the two offers
+    assert lost.offer(1, 2, "u", "b", {"b": 2}, ["a", "b"]) is JOIN_PENDING
+    fresh = JoinTable(rd)
+    n, ready = fresh.recover(nm)
+    assert n == 2
+    assert ready == [(1, 2, "u", {"a": 1, "b": 2})]
+    assert fresh.pending_joins() == 0          # claimed, not left pending
+    assert rd.scan("join/") == {}              # mirrors purged with the claim
+
+
+def test_join_table_ttl_expires_stranded_state():
+    """Long-running sets must not leak: stranded partials (sibling lost
+    with no decodable UID) and tombstones age out like the transient
+    database entries they mirror."""
+    clock = [0.0]
+    jt = JoinTable(ttl_s=10.0, clock=lambda: clock[0])
+    jt.offer(1, 0, "u", "a", {"a": 1}, ["a", "b"])  # never completes
+    jt.mark_dropped("dead")
+    clock[0] += 11.0
+    jt.offer(1, 0, "x", "a", {"a": 1}, ["a", "b"])  # lazy sweep fires here
+    assert jt.pending_uids() == {"x"}               # "u" evicted
+    assert "dead" not in jt.dropped_uids            # tombstone aged out
+    assert jt.stats.expired_joins == 1
+    assert jt.stats.expired_tombstones == 1
+
+
+def test_join_survives_db_replica_failure():
+    dbs = [DatabaseInstance("d0"), DatabaseInstance("d1")]
+    jt = JoinTable(ReplicatedDatabase(dbs))
+    dbs[0].alive = False  # one replica down: write stream falls through
+    jt.offer(1, 0, "u", "a", {"a": 1}, ["a", "b"])
+    assert jt.offer(1, 0, "u", "b", {"b": 2}, ["a", "b"]) == {"a": 1, "b": 2}
+    dbs[0].alive = True
+    fresh = JoinTable(ReplicatedDatabase(dbs))
+    assert fresh.recover() == (0, [])  # claim's purge was deferred, not lost
+
+
+# ====================================================== end-to-end routing
+def _fan_ws(name, *, n_join_instances=1, control_loop=False, **ws_kw):
+    """src -> (mul ∥ add) -> join: join computes 2x + (x+1) = 3x + 1."""
+    ws = WorkflowSet(name, control_loop=control_loop, **ws_kw)
+    ws.register_workflow(WorkflowSpec(1, "fan", [
+        StageSpec("src", fn=lambda p: {"x": p["x"]}, exec_time_s=1e-3),
+        StageSpec("mul", fn=lambda p: {"mul": p["x"] * 2.0},
+                  exec_time_s=1e-3, deps=["src"]),
+        StageSpec("add", fn=lambda p: {"add": p["x"] + 1.0},
+                  exec_time_s=1e-3, deps=["src"]),
+        StageSpec("join", fn=lambda p: float(p["mul"] + p["add"]),
+                  exec_time_s=1e-3, deps=["mul", "add"]),
+    ]))
+    ws.add_instance("s0", stage="src")
+    ws.add_instance("m0", stage="mul")
+    ws.add_instance("a0", stage="add")
+    for i in range(n_join_instances):
+        ws.add_instance(f"j{i}", stage="join")
+    ws.add_proxy("p0")
+    return ws
+
+
+def test_fanout_fanin_end_to_end():
+    ws = _fan_ws("fan")
+    with ws:
+        p = ws.proxies[0]
+        uids = [p.submit(1, {"x": float(i)}) for i in range(12)]
+        for i, u in enumerate(uids):
+            assert p.wait_result(u, timeout_s=5) == 3.0 * i + 1.0
+    # both branches really ran on their own instances
+    assert ws.instances["fan.m0"].stats.processed == 12
+    assert ws.instances["fan.a0"].stats.processed == 12
+    assert ws.joins.stats.completed == 12 and ws.joins.pending_joins() == 0
+    assert ws.dead_uids() == set()
+    assert sum(i.stats.dropped for i in ws.instances.values()) == 0
+
+
+def test_multi_entrance_proxy_fans_out():
+    ws = WorkflowSet("me", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "me", [
+        StageSpec("a", fn=lambda p: {"a": p["x"] * 2.0}, deps=[],
+                  exec_time_s=1e-3),
+        StageSpec("b", fn=lambda p: {"b": p["x"] + 1.0}, deps=[],
+                  exec_time_s=1e-3),
+        StageSpec("join", fn=lambda p: float(p["a"] + p["b"]),
+                  deps=["a", "b"], exec_time_s=1e-3),
+    ]))
+    ws.add_instance("a0", stage="a")
+    ws.add_instance("b0", stage="b")
+    ws.add_instance("j0", stage="join")
+    p = ws.add_proxy("p0")
+    with ws:
+        u1 = p.submit(1, {"x": 4.0})
+        assert p.wait_result(u1, timeout_s=5) == 13.0
+        uids = p.submit_many(1, [{"x": float(i)} for i in range(8)])
+        assert len(uids) == 8  # one UID per request despite two branches
+        for i, u in enumerate(uids):
+            assert p.wait_result(u, timeout_s=5) == 3.0 * i + 1.0
+    assert ws.joins.stats.completed == 9
+
+
+def test_nested_fanin_end_to_end():
+    """src -> b0..b3 -> (j1 = b0+b1) ∥ (j2 = b2+b3) -> final."""
+    ws = WorkflowSet("nest", control_loop=False)
+    stages = [StageSpec("src", fn=lambda p: {"x": p["x"]}, exec_time_s=1e-3)]
+    for i in range(4):
+        stages.append(StageSpec(
+            f"b{i}", fn=(lambda k: lambda p: {f"v{k}": p["x"] * (k + 2)})(i),
+            exec_time_s=1e-3, deps=["src"]))
+    stages.append(StageSpec("j1", fn=lambda p: p, exec_time_s=1e-3,
+                            deps=["b0", "b1"]))
+    stages.append(StageSpec("j2", fn=lambda p: p, exec_time_s=1e-3,
+                            deps=["b2", "b3"]))
+    stages.append(StageSpec(
+        "final",
+        fn=lambda p: float(sum(v for k, v in p.items() if k.startswith("v"))),
+        exec_time_s=1e-3, deps=["j1", "j2"]))
+    ws.register_workflow(WorkflowSpec(1, "nest", stages))
+    for s in ("src", "b0", "b1", "b2", "b3", "j1", "j2", "final"):
+        ws.add_instance(f"{s}_i", stage=s)
+    p = ws.add_proxy("p0")
+    with ws:
+        uids = [p.submit(1, {"x": float(i)}) for i in range(10)]
+        for i, u in enumerate(uids):
+            assert p.wait_result(u, timeout_s=5) == i * (2 + 3 + 4 + 5)
+    assert ws.joins.stats.completed == 30  # j1 + j2 + final per request
+    assert ws.dead_uids() == set() and ws.joins.pending_joins() == 0
+
+
+def test_joined_messages_round_robin_across_fanin_instances():
+    ws = _fan_ws("rr", n_join_instances=2)
+    with ws:
+        p = ws.proxies[0]
+        uids = [p.submit(1, {"x": float(i)}) for i in range(16)]
+        for i, u in enumerate(uids):
+            assert p.wait_result(u, timeout_s=5) == 3.0 * i + 1.0
+    j0 = ws.instances["rr.j0"].stats.processed
+    j1 = ws.instances["rr.j1"].stats.processed
+    assert j0 + j1 == 16 and j0 > 0 and j1 > 0  # joins spread per-edge
+
+
+# ===================================================== property/fuzz suite
+def _random_dag_ws(seed: int):
+    """Seeded random DAG: src fans to 2-5 branches; branches either join
+    directly or through two nested intermediate joins; `final` sums every
+    branch product.  Expected result for x: x * sum(i+2 for branches)."""
+    rng = random.Random(seed)
+    n_branches = rng.randint(2, 5)
+    nested = n_branches >= 3 and rng.random() < 0.5
+    names = [f"b{i}" for i in range(n_branches)]
+    stages = [StageSpec("src", fn=lambda p: {"x": p["x"]}, exec_time_s=1e-4)]
+    for i, n in enumerate(names):
+        stages.append(StageSpec(
+            n, fn=(lambda k: lambda p: {f"v{k}": p["x"] * (k + 2)})(i),
+            exec_time_s=1e-4, deps=["src"]))
+    final_fn = (lambda p: float(
+        sum(v for k, v in p.items() if k.startswith("v"))))
+    if nested:
+        cut = rng.randint(1, n_branches - 1)
+        stages.append(StageSpec("j1", fn=lambda p: p, exec_time_s=1e-4,
+                                deps=names[:cut]))
+        stages.append(StageSpec("j2", fn=lambda p: p, exec_time_s=1e-4,
+                                deps=names[cut:]))
+        stages.append(StageSpec("final", fn=final_fn, exec_time_s=1e-4,
+                                deps=["j1", "j2"]))
+    else:
+        stages.append(StageSpec("final", fn=final_fn, exec_time_s=1e-4,
+                                deps=list(names)))
+    ws = WorkflowSet(f"fuzz{seed}", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "fuzz", stages))
+    for s in stages:
+        for i in range(rng.randint(1, 2)):
+            ws.add_instance(f"{s.name}_{i}", stage=s.name)
+    ws.add_proxy("p0")
+    expect = sum(i + 2 for i in range(n_branches))
+    return ws, expect
+
+
+@pytest.mark.parametrize("seed", [0, 1, 2, 3, 4])
+def test_property_every_uid_resolves_exactly_once(seed):
+    """The set-wide invariant (docs/workflows.md): every submitted UID
+    yields exactly one joined result or is accounted dropped — and with
+    no faults injected, nothing may drop at all."""
+    ws, expect = _random_dag_ws(seed)
+    n = 25
+    with ws:
+        p = ws.proxies[0]
+        uids = [p.submit(1, {"x": float(i)}) for i in range(n)]
+        results = _quiesce(ws, p, uids)
+    assert len(set(uids)) == n
+    assert set(results) == set(uids)           # all resolved, none dropped
+    for i, u in enumerate(uids):
+        assert results[u] == float(i * expect)
+    assert ws.dead_uids() == set()
+    assert ws.joins.pending_joins() == 0       # no partial left behind
+    # submitted == stored + dropped holds set-wide (message-level too)
+    assert sum(i.stats.dropped for i in ws.instances.values()) == 0
+
+
+@pytest.mark.parametrize("seed", [5, 6, 7])
+def test_property_invariant_holds_under_mid_join_reassignment(seed):
+    """assign(drain=True) on a branch instance mid-traffic (the PR-4
+    two-phase drain) must not lose, duplicate, or partially join any
+    request: stored ∪ dead == submitted, every stored value correct."""
+    ws, expect = _random_dag_ws(seed)
+    # ensure the moved branch has a peer so traffic keeps flowing
+    victim = "b0_0"
+    if f"{ws.name}.b0_1" not in ws.instances:
+        ws.add_instance("b0_1", stage="b0")
+    n = 40
+    with ws:
+        p = ws.proxies[0]
+        uids = []
+        for i in range(n):
+            uids.append(p.submit(1, {"x": float(i)}))
+            if i == n // 2:
+                ws.nm.assign(f"{ws.name}.{victim}", "final", drain=True)
+                _wait_until(lambda: ws.instances[
+                    f"{ws.name}.{victim}"].stats.reassignments >= 1)
+        results = _quiesce(ws, p, uids)
+    dead = ws.dead_uids()
+    assert set(results) | dead >= set(uids)          # every UID accounted
+    assert set(results) & dead == set()              # never both
+    for i, u in enumerate(uids):
+        if u in results:
+            assert results[u] == float(i * expect)   # no partial joins
+    assert ws.instances[f"{ws.name}.{victim}"].stats.reassignments >= 1
+
+
+# ========================================================= fault injection
+def test_branch_append_dropped_mid_writev_strands_no_partial():
+    """One branch's ring append is lost on the wire (fault hook drops the
+    payload writev): the sibling partial must never be delivered, the
+    stranded UID shows up in dead_uids() after a quiesce, and drop
+    accounting stays balanced."""
+    ws = _fan_ws("wire")
+    state = {"armed": False, "dropped": 0}
+
+    def hook(client, verb, region, offset, n):
+        # drop exactly one payload write into the `add` branch's inbox
+        if (state["armed"] and verb == "write" and n > 64
+                and region == "wire.a0.inbox"):
+            state["armed"] = False
+            state["dropped"] += 1
+            return False
+        return True
+
+    ws.fabric.fault_hook = hook
+    with ws:
+        p = ws.proxies[0]
+        good1 = [p.submit(1, {"x": float(i)}) for i in range(4)]
+        for u in good1:
+            assert p.wait_result(u, timeout_s=5) == pytest.approx(
+                3.0 * good1.index(u) + 1.0, abs=0)  # noqa: B023
+        state["armed"] = True
+        victim = p.submit(1, {"x": 100.0})
+        good2 = [p.submit(1, {"x": float(i)}) for i in range(4, 8)]
+        results = _quiesce(ws, p, good2 + [victim])
+    assert state["dropped"] == 1
+    assert victim not in results                 # never delivered partially
+    assert victim in ws.dead_uids()              # ...but fully accounted
+    for i, u in zip(range(4, 8), good2):
+        assert results[u] == 3.0 * i + 1.0       # traffic kept flowing
+    # the wire loss surfaced as a corrupt entry at the consumer (§6.1)
+    assert sum(b.stats.corrupt for b in ws.buffers.values()) == 1
+
+
+@pytest.mark.filterwarnings(
+    "ignore::pytest.PytestUnhandledThreadExceptionWarning")
+def test_branch_append_killed_by_simulated_crash_is_accounted():
+    """A SimulatedCrash mid-append (the sender dies mid-writev) kills that
+    worker; the request's surviving branch strands in the join table and
+    is reconciled as dead — no partial join, accounting balanced."""
+    from repro.core import SimulatedCrash
+
+    ws = _fan_ws("crash")
+    state = {"armed": False, "fired": 0}
+
+    def hook(client, verb, region, offset, n):
+        if (state["armed"] and verb == "write" and n > 64
+                and region == "crash.a0.inbox" and client == "crash.s0"):
+            state["armed"] = False
+            state["fired"] += 1
+            raise SimulatedCrash("sender died mid-writev")
+        return True
+
+    ws.fabric.fault_hook = hook
+    with ws:
+        p = ws.proxies[0]
+        first = [p.submit(1, {"x": float(i)}) for i in range(3)]
+        for i, u in enumerate(first):
+            assert p.wait_result(u, timeout_s=5) == 3.0 * i + 1.0
+        state["armed"] = True
+        victim = p.submit(1, {"x": 50.0})  # src's worker dies delivering it
+        _wait_until(lambda: state["fired"] == 1)
+        results = _quiesce(ws, p, [victim], timeout_s=3.0)
+    assert state["fired"] == 1
+    assert victim not in results
+    assert victim in ws.dead_uids()  # stranded partial reconciled as dead
+    assert ws.joins.stats.completed == 3
+
+
+def test_join_owner_eviction_mid_join_never_delivers_partial():
+    """The ControlLoop evicts a fan-in instance whose reports stop while
+    joins are in flight; partials live in the set-level JoinTable, so
+    surviving instances finish every join — none delivered partially."""
+    ws = _fan_ws("ev", n_join_instances=2, control_loop=True,
+                 control_interval_s=0.02, liveness_timeout_s=0.15)
+    with ws:
+        p = ws.proxies[0]
+        warm = [p.submit(1, {"x": float(i)}) for i in range(4)]
+        for i, u in enumerate(warm):
+            assert p.wait_result(u, timeout_s=5) == 3.0 * i + 1.0
+        ws.instances["ev.j0"].stop()  # join-owner dies mid-traffic
+        assert _wait_until(lambda: "ev.j0" not in ws.nm.instances,
+                           timeout_s=3)
+        uids = [p.submit(1, {"x": float(i)}) for i in range(4, 12)]
+        results = _quiesce(ws, p, uids)
+    dead = ws.dead_uids()
+    assert set(results) | dead >= set(uids)
+    for i, u in zip(range(4, 12), uids):
+        if u in results:
+            assert results[u] == 3.0 * i + 1.0   # joined fully or not at all
+    # the survivor (plus any drain leftovers) completed the in-flight joins
+    assert "ev.j0" in ws.control.evicted
+    assert ws.joins.pending_joins() == 0
+    total_j = sum(ws.instances[f"ev.j{i}"].stats.processed for i in (0, 1))
+    assert total_j == len(results) + len(warm)
+
+
+def test_entrance_branch_ring_full_tombstones_whole_request():
+    """If one entrance branch's ring rejects the append, the whole request
+    is fast-rejected, its token released, and its UID tombstoned so the
+    branch copies that DID land can never half-complete."""
+    ws = WorkflowSet("eb", control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "me", [
+        StageSpec("a", fn=lambda p: {"a": p["x"]}, deps=[], exec_time_s=1e-3),
+        StageSpec("b", fn=lambda p: {"b": p["x"]}, deps=[], exec_time_s=1e-3),
+        StageSpec("join", fn=lambda p: float(p["a"] + p["b"]),
+                  deps=["a", "b"], exec_time_s=1e-3),
+    ]))
+    ws.add_instance("a0", stage="a")                # roomy ring
+    ws.add_instance("b0", stage="b", ring_slots=4)  # tiny ring
+    ws.add_instance("j0", stage="join")
+    mon = RequestMonitor(t_entrance_s=1e-4, k_entrance=1000, max_in_flight=100)
+    p = ws.add_proxy("p0", monitor=mon)
+    # never started: nothing drains the entrance rings
+    landed, rejected = [], 0
+    for i in range(8):
+        try:
+            landed.append(p.submit(1, {"x": float(i)}))
+        except Rejected:
+            rejected += 1
+    assert rejected > 0 and landed
+    assert mon.in_flight == len(landed)      # rejected tokens released
+    assert len(ws.joins.dropped_uids) == rejected  # tombstoned, will die
+
+
+# ======================================================= multi-set frontend
+def _simple_ws(name, reject_rate=None, ring_slots=256):
+    ws = WorkflowSet(name, control_loop=False)
+    ws.register_workflow(WorkflowSpec(1, "mul-add", [
+        StageSpec("mul", fn=lambda p: p * 2.0, exec_time_s=1e-3),
+        StageSpec("add", fn=lambda p: p + 1.0, exec_time_s=1e-3),
+    ]))
+    ws.add_instance("m0", stage="mul", ring_slots=ring_slots)
+    ws.add_instance("a0", stage="add")
+    mon = None
+    if reject_rate is not None:
+        mon = RequestMonitor(t_entrance_s=1.0, k_entrance=reject_rate)
+    ws.add_proxy("p0", monitor=mon)
+    return ws
+
+
+def test_multiset_submit_many_end_to_end():
+    ws1, ws2 = _simple_ws("msa"), _simple_ws("msb")
+    with ws1, ws2:
+        front = MultiSetFrontend([ws1, ws2], seed=0)
+        placed = front.submit_many(1, [np.float32(i) for i in range(12)])
+        assert len(placed) == 12
+        for i, (ws, uid) in enumerate(placed):
+            assert ws.proxies[0].wait_result(uid, timeout_s=5) == \
+                np.float32(i * 2 + 1)
+    # aggregated transport stats cover both sets' data planes
+    assert front.transport_stats().sent >= \
+        ws1.transport_stats().sent + ws2.transport_stats().sent - 1
+
+
+def test_multiset_submit_many_spills_rejected_remainder():
+    ws1 = _simple_ws("spa", reject_rate=0)   # admits nothing
+    ws2 = _simple_ws("spb")
+    with ws1, ws2:
+        front = MultiSetFrontend([ws1, ws2], seed=3)
+        placed = front.submit_many(1, [np.float32(i) for i in range(6)])
+        assert len(placed) == 6
+        assert all(ws is ws2 for ws, _ in placed)  # all spilled to ws2
+        for i, (ws, uid) in enumerate(placed):
+            assert ws.proxies[0].wait_result(uid, timeout_s=5) == \
+                np.float32(i * 2 + 1)
+
+
+def test_multiset_submit_many_all_reject_raises():
+    ws1 = _simple_ws("ra", reject_rate=0)
+    ws2 = _simple_ws("rb", reject_rate=0)
+    with ws1, ws2:
+        front = MultiSetFrontend([ws1, ws2], seed=1)
+        with pytest.raises(Rejected):
+            front.submit_many(1, [np.float32(1.0)])
