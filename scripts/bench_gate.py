@@ -1,0 +1,88 @@
+#!/usr/bin/env python
+"""Throughput regression gate.
+
+Runs a fresh ``benchmarks/run.py --json`` (e2e_serving suite only, unless
+--fresh points at an existing dump) and compares the headline
+``e2e_onepiece_req_s`` throughput against the committed baseline JSON,
+failing if it regressed by more than --tolerance (default 10%).
+
+    PYTHONPATH=src python scripts/bench_gate.py            # vs BENCH_PR5.json
+    PYTHONPATH=src python scripts/bench_gate.py --fresh out.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import os
+import pathlib
+import re
+import subprocess
+import sys
+import tempfile
+
+REPO = pathlib.Path(__file__).resolve().parent.parent
+THROUGHPUT_RE = re.compile(r"throughput=([\d.]+)/s")
+
+
+def throughput_of(bench_json: dict, metric: str) -> float:
+    for row in bench_json.get("rows", []):
+        if row.get("name") == metric:
+            m = THROUGHPUT_RE.search(row.get("derived") or "")
+            if not m:
+                raise SystemExit(
+                    f"bench_gate: row {metric!r} has no throughput=N/s "
+                    f"field in derived={row.get('derived')!r}")
+            return float(m.group(1))
+    raise SystemExit(f"bench_gate: no row named {metric!r}")
+
+
+def run_fresh(suite: str) -> dict:
+    out = pathlib.Path(tempfile.mkstemp(suffix=".json")[1])
+    env = dict(os.environ)
+    env["PYTHONPATH"] = f"{REPO / 'src'}" + (
+        os.pathsep + env["PYTHONPATH"] if env.get("PYTHONPATH") else "")
+    try:
+        r = subprocess.run(
+            [sys.executable, "-m", "benchmarks.run", "--only", suite,
+             "--json", str(out)],
+            cwd=REPO, env=env)
+        if r.returncode != 0:
+            raise SystemExit(f"bench_gate: benchmark run failed "
+                             f"(exit {r.returncode})")
+        return json.loads(out.read_text())
+    finally:
+        out.unlink(missing_ok=True)
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_PR5.json"))
+    ap.add_argument("--metric", default="e2e_onepiece_req_s")
+    ap.add_argument("--suite", default="e2e_serving",
+                    help="suite to (re)run for the fresh measurement")
+    ap.add_argument("--tolerance", type=float, default=0.10,
+                    help="allowed fractional regression (0.10 = 10%%)")
+    ap.add_argument("--fresh", default="",
+                    help="existing fresh dump; skips rerunning the bench")
+    args = ap.parse_args()
+
+    base = json.loads(pathlib.Path(args.baseline).read_text())
+    fresh = (json.loads(pathlib.Path(args.fresh).read_text()) if args.fresh
+             else run_fresh(args.suite))
+
+    b = throughput_of(base, args.metric)
+    f = throughput_of(fresh, args.metric)
+    floor = b * (1.0 - args.tolerance)
+    delta = (f - b) / b * 100.0
+    print(f"bench_gate: {args.metric}: baseline {b:.2f}/s, "
+          f"fresh {f:.2f}/s ({delta:+.1f}%), floor {floor:.2f}/s")
+    if f < floor:
+        print(f"bench_gate: FAIL — regressed more than "
+              f"{args.tolerance * 100:.0f}%")
+        return 1
+    print("bench_gate: OK")
+    return 0
+
+
+if __name__ == "__main__":
+    sys.exit(main())

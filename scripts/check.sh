@@ -3,6 +3,7 @@
 #   scripts/check.sh          # fast tier (~10s), then the full tier
 #   scripts/check.sh --fast   # fast tier only (transport/cluster/control)
 #   scripts/check.sh --dag    # DAG tier only (routing/join/fault/property)
+#   scripts/check.sh --lint   # static analysis only (docs/static_analysis.md)
 # Extra args after the mode flag are passed through to pytest.
 set -euo pipefail
 cd "$(dirname "$0")/.."
@@ -12,7 +13,18 @@ mode=all
 case "${1:-}" in
     --fast) mode=fast; shift ;;
     --dag)  mode=dag;  shift ;;
+    --lint) mode=lint; shift ;;
 esac
+
+if [ "$mode" = "lint" ]; then
+    echo "== lint tier: python -m repro.analysis src/repro =="
+    # the ring and transport modules must stay suppression-free (the two
+    # files the §6.1 protocol lives in — no silenced findings there)
+    python -m repro.analysis src/repro \
+        --forbid-suppressions src/repro/core/ring_buffer.py \
+        --forbid-suppressions src/repro/core/transport.py "$@"
+    exit 0
+fi
 
 if [ "$mode" = "dag" ]; then
     echo "== dag tier: pytest tests/test_dag_workflows.py =="

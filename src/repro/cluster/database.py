@@ -3,10 +3,11 @@ consensus-free replication, fetch-one-try-next client protocol.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
+
+from repro.analysis.runtime import make_lock
 
 
 @dataclass
@@ -26,8 +27,8 @@ class DatabaseInstance:
         self.default_ttl_s = default_ttl_s
         self.purge_on_fetch = purge_on_fetch
         self.clock = clock
-        self._lock = threading.Lock()
-        self._data: Dict[str, _Entry] = {}
+        self._lock = make_lock("DatabaseInstance._lock")
+        self._data: Dict[str, _Entry] = {}  # guarded_by: _lock
         self.alive = True
 
     def store(self, uid: str, value: Any, ttl_s: Optional[float] = None) -> None:
@@ -90,14 +91,16 @@ class ReplicatedDatabase:
 
     def __init__(self, replicas: Sequence[DatabaseInstance]):
         self.replicas = list(replicas)
-        self._lock = threading.Lock()
+        self._lock = make_lock("ReplicatedDatabase._lock")
         # uids whose post-fetch purge could not reach a replica (it was
         # down at the time): applied on the next touch once it recovers,
         # so a purged "accessed-once" result can never resurrect there.
-        self._missed_purges: List[set] = [set() for _ in self.replicas]
+        self._missed_purges: List[set] = [set() for _ in self.replicas]  # guarded_by: _lock
 
     def _flush_missed_purges(self, idx: int, r: DatabaseInstance) -> None:
-        if not self._missed_purges[idx]:  # hot path: no failure backlog
+        # Unlocked emptiness probe: the outer list never changes shape, and
+        # a stale non-empty read just means one extra locked check.
+        if not self._missed_purges[idx]:  # analysis: ignore[guarded-field] -- benign racy fast path
             return
         with self._lock:
             pending = list(self._missed_purges[idx])
@@ -118,7 +121,8 @@ class ReplicatedDatabase:
                 ok += 1
             except ConnectionError:
                 continue
-            if self._missed_purges[idx]:
+            # same benign racy emptiness probe as _flush_missed_purges
+            if self._missed_purges[idx]:  # analysis: ignore[guarded-field] -- benign racy fast path
                 with self._lock:
                     # a fresh store supersedes any purge deferred for this uid
                     self._missed_purges[idx].discard(uid)

@@ -32,11 +32,11 @@ demotes the merge to ``{branch_name: partial}``.
 """
 from __future__ import annotations
 
-import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, Optional, Sequence, Set, Tuple
 
+from repro.analysis.runtime import make_lock
 from repro.cluster.database import ReplicatedDatabase
 
 #: ``offer`` outcome: the UID was tombstoned by a drop elsewhere — discard.
@@ -78,17 +78,17 @@ class JoinTable:
         self.database = database
         self.ttl_s = ttl_s
         self.clock = clock
-        self._lock = threading.Lock()
+        self._lock = make_lock("JoinTable._lock")
         # (app_id, stage_idx, uid_hex) -> {branch stage name: partial payload}
-        self._pending: Dict[Tuple[int, int, str], Dict[str, Any]] = {}
-        self._pending_at: Dict[Tuple[int, int, str], float] = {}
+        self._pending: Dict[Tuple[int, int, str], Dict[str, Any]] = {}  # guarded_by: _lock
+        self._pending_at: Dict[Tuple[int, int, str], float] = {}  # guarded_by: _lock
         #: UIDs known dead anywhere in the pipeline (per-request §9 ledger).
         #: Membership tests are safe anywhere; to iterate, take
         #: ``dropped_snapshot()`` — the raw set mutates under you.
-        self.dropped_uids: Set[str] = set()
-        self._dropped_at: Dict[str, float] = {}
+        self.dropped_uids: Set[str] = set()  # guarded_by: _lock
+        self._dropped_at: Dict[str, float] = {}  # guarded_by: _lock
         self._last_sweep = clock()
-        self.stats = JoinStats()
+        self.stats = JoinStats()  # guarded_by: _lock
 
     @staticmethod
     def _db_key(app_id: int, stage_idx: int, uid_hex: str, branch: str) -> str:

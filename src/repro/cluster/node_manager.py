@@ -41,6 +41,7 @@ from collections import defaultdict, deque
 from dataclasses import dataclass, field
 from typing import Callable, Dict, List, Optional, Sequence, Tuple
 
+from repro.analysis.runtime import make_lock, make_rlock
 from repro.cluster.paxos import elect_primary
 
 
@@ -157,14 +158,15 @@ class InstanceInfo:
 class NodeManager:
     def __init__(self, *, scale_threshold: float = 0.85, steal_below: float = 0.70,
                  window: int = 8):
-        self._lock = threading.RLock()
-        self.instances: Dict[str, InstanceInfo] = {}
-        self.workflows: Dict[int, WorkflowSpec] = {}
+        self._lock = make_rlock("NodeManager._lock")
+        self.instances: Dict[str, InstanceInfo] = {}  # guarded_by: _lock
+        self.workflows: Dict[int, WorkflowSpec] = {}  # guarded_by: _lock
         self.scale_threshold = scale_threshold
         self.steal_below = steal_below
         self.window = window
-        self.reassignments: List[Tuple[str, Optional[str], str]] = []  # audit log
-        self._topology_version = 0  # bumped whenever routing state changes
+        # audit log of (name, old_stage, new_stage)
+        self.reassignments: List[Tuple[str, Optional[str], str]] = []  # guarded_by: _lock
+        self._topology_version = 0  # routing epoch; guarded_by: _lock
 
     # ------------------------------------------------------------ registry
     def register_instance(self, name: str, role: str = "workflow",
@@ -360,7 +362,8 @@ class NodeManager:
         (Theorem 1 applied per path) so DAG and chain specs both rate-match."""
         from repro.core.pipeline_planner import plan_dag
 
-        wf = self.workflows[app_id]
+        with self._lock:
+            wf = self.workflows[app_id]
         times = {s.name: max(s.exec_time_s, 1e-9) for s in wf.stages}
         return plan_dag(times, wf.resolved_deps(), k_entrance)
 
@@ -426,16 +429,27 @@ class NodeManager:
         would apply twice.  Used by NMCluster.maybe_elect so a newly
         elected primary serves the most complete state any live replica
         saw."""
-        with self._lock, other._lock:
-            for app_id, wf in other.workflows.items():
-                self.workflows.setdefault(app_id, wf)
-            for name, info in other.instances.items():
-                mine = self.instances.get(name)
-                if mine is None or info.version > mine.version:
-                    self.instances[name] = self._copy_info(info)
-            self._topology_version = (
-                max(self._topology_version, other._topology_version) + 1
-            )
+        # Canonical acquisition order: both replicas' locks are the same
+        # lock class, and A.absorb(B) racing B.absorb(A) with naive
+        # self-then-other ordering is a textbook symmetric deadlock (today
+        # NMCluster._elect_lock serializes callers, but absorb must not
+        # depend on its caller for soundness).  id() gives a total order
+        # that both racers agree on.
+        first, second = ((self, other) if id(self) <= id(other)
+                         else (other, self))
+        with first._lock, second._lock:  # analysis: ignore[lock-order] -- id()-ordered above
+            self._absorb_locked(other)
+
+    def _absorb_locked(self, other: "NodeManager") -> None:
+        for app_id, wf in other.workflows.items():
+            self.workflows.setdefault(app_id, wf)
+        for name, info in other.instances.items():
+            mine = self.instances.get(name)
+            if mine is None or info.version > mine.version:
+                self.instances[name] = self._copy_info(info)
+        self._topology_version = (
+            max(self._topology_version, other._topology_version) + 1
+        )
 
     def sync_from(self, primary: "NodeManager") -> None:
         """Recovered-replica resync: replace local state with the primary's
@@ -569,7 +583,7 @@ class NMCluster:
         self.heartbeat_timeout = heartbeat_timeout
         self.last_heartbeat = time.monotonic()
         self.alive = set(self.node_ids)
-        self._elect_lock = threading.Lock()
+        self._elect_lock = make_lock("NMCluster._elect_lock")
 
     @property
     def primary(self) -> NodeManager:

@@ -12,14 +12,16 @@ import threading
 from dataclasses import dataclass, field
 from typing import Any, Dict, List, Optional, Tuple
 
+from repro.analysis.runtime import make_lock
+
 
 @dataclass
 class Acceptor:
     node_id: int
-    promised: int = -1
-    accepted_n: int = -1
-    accepted_v: Any = None
-    _lock: threading.Lock = field(default_factory=threading.Lock)
+    promised: int = -1  # guarded_by: _lock
+    accepted_n: int = -1  # guarded_by: _lock
+    accepted_v: Any = None  # guarded_by: _lock
+    _lock: Any = field(default_factory=lambda: make_lock("Acceptor._lock"))
 
     def prepare(self, n: int) -> Optional[Tuple[int, Any]]:
         """Phase 1b: promise if n is the highest seen; returns prior accept."""

@@ -18,6 +18,7 @@ from repro.cluster.node_manager import (
     StageSpec,
     WorkflowSpec,
 )
+from repro.analysis.runtime import lock_stats_snapshot
 from repro.cluster.proxy import Proxy, Rejected
 from repro.core.rdma import RdmaFabric
 from repro.core.request_monitor import RequestMonitor
@@ -77,12 +78,17 @@ class WorkflowSet:
     # ------------------------------------------------------------- telemetry
     def transport_stats(self) -> ChannelStats:
         """Data-plane totals for the whole set: every proxy's entrance
-        channels plus every instance's delivery channels."""
+        channels plus every instance's delivery channels.  When the run
+        is lock-instrumented (pytest, REPRO_LOCK_CHECK=1), ``lock_stats``
+        carries per-lock-name contention counters — acquisitions,
+        contended count, total/max wait and hold (docs/static_analysis.md);
+        {} in production."""
         total = ChannelStats()
         for p in self.proxies:
             total = total.merge(p.transport_stats())
         for inst in self.instances.values():
             total = total.merge(inst.rd.transport_stats())
+        total.lock_stats = lock_stats_snapshot()
         return total
 
     def dead_uids(self) -> set:

@@ -22,12 +22,13 @@ Fidelity notes:
 from __future__ import annotations
 
 import struct
-import threading
 import time
 from dataclasses import dataclass, field
 from typing import Callable, Dict, Optional, Sequence, Union
 
 import numpy as np
+
+from repro.analysis.runtime import make_lock
 
 Buf = Union[bytes, bytearray, memoryview]
 
@@ -95,8 +96,10 @@ class MemoryRegion:
 
     def __init__(self, name: str, size: int):
         self.name = name
+        # plain read/write deliberately bypass atomic_lock (torn reads are
+        # possible exactly like on real hardware) — so buf is NOT guarded
         self.buf = np.zeros(size, dtype=np.uint8)
-        self.atomic_lock = threading.Lock()
+        self.atomic_lock = make_lock("MemoryRegion.atomic_lock")
 
     def __len__(self) -> int:
         return len(self.buf)
@@ -114,8 +117,8 @@ class RdmaFabric:
         self.regions: Dict[str, MemoryRegion] = {}
         self.cost = cost or CostModel()
         self.sleep = sleep
-        self.stats = FabricStats()
-        self._stats_lock = threading.Lock()
+        self.stats = FabricStats()  # guarded_by: _stats_lock
+        self._stats_lock = make_lock("RdmaFabric._stats_lock")
         self.fault_hook: Optional[FaultHook] = None
 
     # ------------------------------------------------------------- registry

@@ -14,10 +14,11 @@ burst of drops can never wedge admission permanently.
 """
 from __future__ import annotations
 
-import threading
 import time
 from collections import deque
 from dataclasses import dataclass
+
+from repro.analysis.runtime import make_lock
 
 
 @dataclass
@@ -46,12 +47,12 @@ class RequestMonitor:
         nm_managed: bool = False,
         clock=time.monotonic,
     ):
-        self._lock = threading.Lock()
+        self._lock = make_lock("RequestMonitor._lock")
         self.window_s = window_s
         self.clock = clock
         self.stats = MonitorStats()
-        self._arrivals: deque = deque()
-        self._in_flight: deque = deque()  # admission timestamps, oldest first
+        self._arrivals: deque = deque()  # guarded_by: _lock
+        self._in_flight: deque = deque()  # admission stamps, oldest first; guarded_by: _lock
         self.max_in_flight = max_in_flight  # 0 = unbounded
         self.in_flight_ttl_s = in_flight_ttl_s
         # NM-managed monitors get live (T_X, K) pushes from the control

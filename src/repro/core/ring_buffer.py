@@ -36,6 +36,7 @@ reproduce Cases 1-8 verbatim.
 from __future__ import annotations
 
 import struct
+import threading
 import time
 import zlib
 from dataclasses import dataclass
@@ -117,6 +118,10 @@ class DoubleRingBuffer:
         self.total_size = self.buf_off + buf_size
         self.consumer_id = consumer_id
         self.stats = RingBufferStats()
+        # Optional repro.analysis.ring_checker.RingProtocolChecker; when set,
+        # every §6.1 atomic action is mirrored as a checker event.  None in
+        # production — the emission guard is one attribute load.
+        self.checker = None
         if create:
             fabric.register(region, self.total_size)
 
@@ -182,6 +187,8 @@ class DoubleRingBuffer:
         if item is None:
             return None
         self._write_head(new_hb, new_hs)
+        if self.checker is not None:
+            self.checker.event("head_wb", 0, hs=new_hs)
         return item
 
     def drain(self, limit: int = 1 << 30):
@@ -202,6 +209,8 @@ class DoubleRingBuffer:
             hb, hs = hb2, hs2
         if out:
             self._write_head(hb, hs)
+            if self.checker is not None:
+                self.checker.event("head_wb", 0, hs=hs)
         return out
 
 
@@ -269,15 +278,22 @@ class AppendOp:
 
     # ------------------------------------------------------------- states
     def _s_lock(self) -> str:
-        self.p._acquire(self.token)
+        takeover, waited = self.p._acquire(self.token)
+        ck = self.rb.checker
+        if ck is not None:
+            ck.event("lock", self.token, takeover=takeover, waited=waited,
+                     timeout=self.p.lock_timeout_s, op="single")
         self.state = "gh"
         return "lock"
 
     def _s_gh(self) -> str:
         """Read header; Case-7 recovery; space check."""
         rb, f, me = self.rb, self.rb.fabric, self.p.client
+        ck = rb.checker
         while True:
             tb, ts, hb, hs = rb.read_header(me)
+            if ck is not None:
+                ck.event("gh", self.token, tb=tb, ts=ts, hb=hb, hs=hs)
             if hs > ts:
                 # Stale tail: a previous lock holder committed entries (WL)
                 # that the consumer already drained via their busy bits, but
@@ -287,11 +303,16 @@ class AppendOp:
                 # forever; fast-forward to the head, which is always a safe
                 # lower bound for the true tail (everything before it was
                 # committed AND consumed).
+                if ck is not None:
+                    ck.event("fastforward", self.token, ts=ts, hs=hs)
                 tb, ts = hb, hs
                 rb.stats.tail_fastforwards += 1
             if ts - hs >= rb.n_slots:
                 self.p._release(self.token)
                 rb.stats.aborts_full += 1
+                if ck is not None:
+                    ck.event("abort_full", self.token)
+                    ck.event("unlock", self.token)
                 self.state = "abort_full"
                 return "gh"
             word = f.read_u64(me, rb.region, rb._slot_addr(ts))
@@ -301,11 +322,16 @@ class AppendOp:
                 _, tb2 = _advance(tb, word & SIZE_MASK, rb.buf_size)
                 f.write(me, rb.region, OFF_TAIL_BUF, _U64x2.pack(tb2, ts + 1))
                 rb.stats.case7_recoveries += 1
+                if ck is not None:
+                    ck.event("case7", self.token, ts=ts)
                 continue
             self.write_pos, self.new_tail = _advance(tb, self.size, rb.buf_size)
             if self.new_tail - hb > rb.buf_size:
                 self.p._release(self.token)
                 rb.stats.aborts_full += 1
+                if ck is not None:
+                    ck.event("abort_full", self.token)
+                    ck.event("unlock", self.token)
                 self.state = "abort_full"
                 return "gh"
             self.tail_buf, self.tail_slot = tb, ts
@@ -317,6 +343,8 @@ class AppendOp:
         rb.fabric.writev(
             self.p.client, rb.region, rb.buf_off + self.write_pos, self.parts
         )
+        if rb.checker is not None:
+            rb.checker.event("wb", self.token)
         self.state = "wl"
         return "wb"
 
@@ -332,8 +360,12 @@ class AppendOp:
             # (Cases 2, 3, 6).  Our buffer write may have corrupted their
             # payload — the consumer's checksum will discard it.
             rb.stats.aborts_cas += 1
+            if rb.checker is not None:
+                rb.checker.event("wl", self.token, won=False)
             self.state = "abort_cas"
             return "wl"
+        if rb.checker is not None:
+            rb.checker.event("wl", self.token, won=True)
         self.state = "uh"
         return "wl"
 
@@ -342,12 +374,16 @@ class AppendOp:
         # tail_buf/tail_slot are adjacent: one 16B write, not two 8B writes
         f.write(me, rb.region, OFF_TAIL_BUF,
                 _U64x2.pack(self.new_tail, self.tail_slot + 1))
+        if rb.checker is not None:
+            rb.checker.event("uh", self.token, ts=self.tail_slot + 1)
         self.state = "unlock"
         return "uh"
 
     def _s_unlock(self) -> str:
         self.p._release(self.token)
         self.rb.stats.produced += 1
+        if self.rb.checker is not None:
+            self.rb.checker.event("unlock", self.token)
         self.state = "done"
         return "unlock"
 
@@ -377,24 +413,33 @@ class RingProducer:
         self.lock_timeout_s = lock_timeout_s
         self.client = client or f"producer-{producer_id}"
         self._nonce = 0
+        # Channel.send_parts/send_many call append from arbitrary threads
+        # without any Python lock (holding one across a ring append would
+        # stall every other sender — see the blocking-under-lock lint); the
+        # nonce is the only producer-local mutable word, so it takes its own
+        # leaf mutex.
+        self._nonce_lock = threading.Lock()
 
     def _new_token(self) -> int:
         # `or 1` binds to the wrapped nonce, not the whole token: after the
         # 24-bit nonce wraps to 0 the token must still be non-zero (and carry
         # a non-zero nonce) for EVERY producer id, including id 0 — a zero
         # token would alias the unlocked state.
-        self._nonce = (self._nonce + 1) & 0xFFFFFF or 1
-        return (self.producer_id << 24) | self._nonce
+        with self._nonce_lock:
+            self._nonce = (self._nonce + 1) & 0xFFFFFF or 1
+            return (self.producer_id << 24) | self._nonce
 
     # ----------------------------------------------------------- lock mgmt
-    def _acquire(self, token: int) -> None:
+    def _acquire(self, token: int) -> tuple[bool, float]:
+        """Returns (was_takeover, seconds spent watching the final holder)."""
         rb, f = self.rb, self.rb.fabric
+        t0 = time.monotonic()
         seen: Optional[int] = None
-        seen_at = 0.0
+        seen_at = t0
         while True:
             old = f.compare_and_swap(self.client, rb.region, OFF_LOCK, 0, token)
             if old == 0:
-                return
+                return False, time.monotonic() - t0
             now = time.monotonic()
             if old != seen:
                 seen, seen_at = old, now
@@ -403,7 +448,7 @@ class RingProducer:
                 got = f.compare_and_swap(self.client, rb.region, OFF_LOCK, old, token)
                 if got == old:
                     rb.stats.lock_takeovers += 1
-                    return
+                    return True, now - seen_at
                 seen = None
             time.sleep(0)  # yield
 
@@ -450,10 +495,16 @@ class RingProducer:
         if not entries:
             return 0
         token = self._new_token()
-        self._acquire(token)
+        takeover, waited = self._acquire(token)
+        ck = rb.checker
+        if ck is not None:
+            ck.event("lock", token, takeover=takeover, waited=waited,
+                     timeout=self.lock_timeout_s, op="batch")
         # Stale-tail fast-forward (hs > ts) is handled at the top of each
         # entry's scan loop below — see AppendOp._s_gh for the full story.
         tb, ts, hb, hs = rb.read_header(me)
+        if ck is not None:
+            ck.event("gh", token, tb=tb, ts=ts, hb=hb, hs=hs)
         appended = 0
         full = False
         for parts, size in entries:
@@ -464,6 +515,8 @@ class RingProducer:
                     # consumer drained past our (stale) tail view — e.g. we
                     # were taken over mid-batch and the taker's entries were
                     # already consumed; never append behind the head.
+                    if ck is not None:
+                        ck.event("fastforward", token, ts=ts, hs=hs)
                     tb, ts = hb, hs
                     rb.stats.tail_fastforwards += 1
                 if ts - hs >= rb.n_slots:
@@ -471,6 +524,8 @@ class RingProducer:
                         full = True
                         break
                     _, _, hb, hs = rb.read_header(me)  # head may have moved
+                    if ck is not None:
+                        ck.event("gh", token, hs=hs)
                     refreshed = True
                     continue
                 word = f.read_u64(me, rb.region, rb._slot_addr(ts))
@@ -480,13 +535,19 @@ class RingProducer:
                 ts += 1
                 f.write(me, rb.region, OFF_TAIL_BUF, _U64x2.pack(tb, ts))
                 rb.stats.case7_recoveries += 1
+                if ck is not None:
+                    ck.event("case7", token, ts=ts)
             if full:
                 break
             write_pos, new_tail = _advance(tb, size, rb.buf_size)
             if new_tail - hb > rb.buf_size:
                 if not refreshed:
                     _, _, hb, hs = rb.read_header(me)
+                    if ck is not None:
+                        ck.event("gh", token, hs=hs)
                     if hs > ts:
+                        if ck is not None:
+                            ck.event("fastforward", token, ts=ts, hs=hs)
                         tb, ts = hb, hs
                         rb.stats.tail_fastforwards += 1
                         write_pos, new_tail = _advance(tb, size, rb.buf_size)
@@ -494,6 +555,8 @@ class RingProducer:
                     full = True
                     break
             f.writev(me, rb.region, rb.buf_off + write_pos, parts)
+            if ck is not None:
+                ck.event("wb", token)
             old = f.compare_and_swap(
                 me, rb.region, rb._slot_addr(ts), 0, BUSY_BIT | size
             )
@@ -504,14 +567,24 @@ class RingProducer:
                 # neither the tail header nor the lock is ours anymore.
                 rb.stats.aborts_cas += 1
                 rb.stats.produced += appended
+                if ck is not None:
+                    ck.event("wl", token, won=False)
                 return appended
+            if ck is not None:
+                ck.event("wl", token, won=True)
             tb, ts = new_tail, ts + 1
             appended += 1
         if appended:
             # the single batched UH ("doorbell"): one 16B tail-header write
             f.write(me, rb.region, OFF_TAIL_BUF, _U64x2.pack(tb, ts))
             rb.stats.produced += appended
+            if ck is not None:
+                ck.event("uh", token, ts=ts)
         if full:
             rb.stats.aborts_full += 1
+            if ck is not None:
+                ck.event("abort_full", token)
         self._release(token)
+        if ck is not None:
+            ck.event("unlock", token)
         return appended

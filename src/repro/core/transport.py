@@ -27,11 +27,11 @@ the cluster package: the directory object is duck-typed (anything with a
 """
 from __future__ import annotations
 
-import threading
 import time
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence
 
+from repro.analysis.runtime import make_lock
 from repro.core.messaging import WorkflowMessage
 from repro.core.ring_buffer import DoubleRingBuffer, PartsLike, RingProducer
 
@@ -43,6 +43,10 @@ class ChannelStats:
     retries: int = 0
     bytes_sent: int = 0
     batches: int = 0
+    # per-lock-name contention stats (repro.analysis.runtime.LockStats
+    # dicts); populated by WorkflowSet.transport_stats() when the suite
+    # runs with lock instrumentation, {} otherwise
+    lock_stats: Dict[str, dict] = field(default_factory=dict)
 
     def merge(self, other: "ChannelStats") -> "ChannelStats":
         return ChannelStats(
@@ -51,6 +55,7 @@ class ChannelStats:
             retries=self.retries + other.retries,
             bytes_sent=self.bytes_sent + other.bytes_sent,
             batches=self.batches + other.batches,
+            lock_stats={**self.lock_stats, **other.lock_stats},
         )
 
 
@@ -71,10 +76,8 @@ class Channel:
         self.target = target
         self.max_retries = max_retries
         self.retry_interval_s = retry_interval_s
-        self.stats = ChannelStats()
-        # Serializes concurrent workers sharing this channel so producer
-        # tokens are never reused by two in-flight appends.
-        self._lock = threading.Lock()
+        self._lock = make_lock("Channel._lock")
+        self.stats = ChannelStats()  # guarded_by: _lock
 
     def send_parts(self, parts: PartsLike) -> bool:
         nbytes = (
@@ -82,17 +85,25 @@ class Channel:
             if isinstance(parts, (bytes, bytearray, memoryview))
             else sum(len(p) for p in parts)
         )
-        with self._lock:
-            for attempt in range(self.max_retries):
-                if self.producer.append(parts):
+        # The retry/append loop runs UNLOCKED.  Holding a Python lock across
+        # a ring append or the retry sleep (as this loop originally did)
+        # stalls every other worker sharing the channel — and a sender
+        # descheduled mid-append while holding the §6.1 ring lock looks dead
+        # to its peers, inviting a takeover and the Case-2 same-size clobber.
+        # Concurrent appends on one producer are safe: the ring lock
+        # serializes them and _new_token hands out distinct tokens.
+        for attempt in range(self.max_retries):
+            if self.producer.append(parts):
+                with self._lock:
                     self.stats.sent += 1
                     self.stats.retries += attempt
                     self.stats.bytes_sent += nbytes
-                    return True
-                time.sleep(self.retry_interval_s)
+                return True
+            time.sleep(self.retry_interval_s)
+        with self._lock:
             self.stats.retries += self.max_retries
             self.stats.dropped += 1
-            return False
+        return False
 
     def send(self, msg: WorkflowMessage) -> bool:
         return self.send_parts(msg.pack_parts())
@@ -103,19 +114,24 @@ class Channel:
         dropped (§9)."""
         parts = [m.pack_parts() for m in msgs]
         done = 0
+        retries = 0
+        # Unlocked for the same reason as send_parts; interleaved batches
+        # from two workers are each internally ordered, which is all §4.5
+        # requires (per-uid order comes from the per-key round-robin).
+        for _attempt in range(self.max_retries):
+            n = self.producer.append_many(parts[done:])
+            done += n
+            if done >= len(parts):
+                break
+            retries += 1
+            time.sleep(self.retry_interval_s)
+        nbytes = sum(sum(len(x) for x in p) for p in parts[:done])
         with self._lock:
-            for attempt in range(self.max_retries):
-                n = self.producer.append_many(parts[done:])
-                done += n
-                if done >= len(parts):
-                    break
-                self.stats.retries += 1
-                time.sleep(self.retry_interval_s)
             self.stats.batches += 1
+            self.stats.retries += retries
             self.stats.sent += done
             self.stats.dropped += len(parts) - done
-            for p in parts[:done]:
-                self.stats.bytes_sent += sum(len(x) for x in p)
+            self.stats.bytes_sent += nbytes
         return done
 
 
@@ -140,11 +156,11 @@ class Router:
         )
         self.max_retries = max_retries
         self.retry_interval_s = retry_interval_s
-        self._channels: Dict[str, Channel] = {}
-        self._rr: Dict[Hashable, int] = {}
-        self._lock = threading.Lock()
-        self._topology_version = -1
-        self._retired = ChannelStats()  # stats of evicted channels
+        self._lock = make_lock("Router._lock")
+        self._channels: Dict[str, Channel] = {}  # guarded_by: _lock
+        self._rr: Dict[Hashable, int] = {}  # guarded_by: _lock
+        self._topology_version = -1  # guarded_by: _lock
+        self._retired = ChannelStats()  # stats of evicted; guarded_by: _lock
 
     # ------------------------------------------------------------- channels
     def _sync_topology_locked(self) -> None:

@@ -1,0 +1,80 @@
+"""Suite-wide concurrency-soundness plugin (docs/static_analysis.md).
+
+Two jobs:
+
+1. At configure time, switch :func:`repro.analysis.runtime.make_lock` /
+   ``make_rlock`` into instrumented mode so every lock the suite creates
+   records real acquisition orders and contention stats.  Opt out with
+   ``REPRO_LOCK_CHECK=0`` (e.g. when profiling).
+
+2. At session end, report:
+   * cycles in the OBSERVED lock graph (potential deadlocks that really
+     happened order-wise during this run), and
+   * the static analysis verdict over ``src/repro`` (lock-order,
+     guarded-field, blocking-under-lock, jit-purity).
+
+   Either finding turns a green run red (exit status 1) — this is the CI
+   gate the multi-process work inherits.
+"""
+from __future__ import annotations
+
+import os
+import pathlib
+
+SRC = pathlib.Path(__file__).resolve().parent.parent / "src" / "repro"
+
+_RUNTIME_ON = False
+
+
+def pytest_configure(config):
+    global _RUNTIME_ON
+    if os.environ.get("REPRO_LOCK_CHECK", "1") == "0":
+        return
+    from repro.analysis import runtime
+
+    runtime.instrument_locks(True)
+    _RUNTIME_ON = True
+
+
+def pytest_sessionfinish(session, exitstatus):
+    # Don't pile analysis noise onto an already-failing run's last screen,
+    # and don't bother on collection-only invocations.
+    if getattr(session.config.option, "collectonly", False):
+        return
+    problems = []
+
+    if _RUNTIME_ON:
+        from repro.analysis import runtime
+
+        graph = runtime.default_graph()
+        for cyc in graph.find_cycles():
+            problems.append(
+                "observed lock-order cycle: " + " -> ".join(cyc))
+
+    if SRC.is_dir():
+        from repro.analysis import run_all
+
+        problems.extend(str(v) for v in run_all([SRC]))
+
+    tr = session.config.pluginmanager.get_plugin("terminalreporter")
+
+    def write(line, **kw):
+        if tr is not None:
+            tr.write_line(line, **kw)
+        else:
+            print(line)
+    if problems:
+        write("")
+        write("concurrency-soundness gate FAILED:", red=True)
+        for p in problems:
+            write("  " + p, red=True)
+        session.exitstatus = 1
+    elif _RUNTIME_ON:
+        from repro.analysis import runtime
+
+        stats = runtime.lock_stats_snapshot()
+        n_edges = len(runtime.default_graph().edges)
+        write("")
+        write(
+            f"concurrency gate: 0 cycles / 0 static violations "
+            f"({len(stats)} lock names, {n_edges} observed edges)")

@@ -1,0 +1,33 @@
+"""Seeded violation: host-sync calls inside jitted functions, one per
+recognised jit form (decorator, functools.partial decorator, assignment).
+Never imported — consumed as AST text by tests/test_analysis.py."""
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@jax.jit
+def bad_mean(x):
+    return float(jnp.mean(x))      # VIOLATION: host cast on a tracer
+
+
+@functools.partial(jax.jit, static_argnums=0)
+def bad_pull(n, x):
+    host = np.asarray(x)           # VIOLATION: device->host copy in jit
+    return jnp.sum(x) + host.sum()
+
+
+def _step(x):
+    x = x * 2
+    x.block_until_ready()          # VIOLATION: device sync in jitted fn
+    return x.item()                # VIOLATION: host sync in jitted fn
+
+
+fast_step = jax.jit(_step)
+
+
+def clean_host_side(x):
+    # not jitted: host syncs here are fine
+    return float(np.asarray(x).sum())

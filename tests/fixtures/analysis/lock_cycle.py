@@ -1,0 +1,22 @@
+"""Seeded violation: lock-order cycle (A -> B in one method, B -> A in
+another).  Two threads running `forward` and `backward` concurrently can
+each hold one lock and wait forever on the other.  Never imported —
+consumed as AST text by tests/test_analysis.py."""
+import threading
+
+
+class Pair:
+    def __init__(self):
+        self.a_lock = threading.Lock()
+        self.b_lock = threading.Lock()
+        self.total = 0
+
+    def forward(self):
+        with self.a_lock:
+            with self.b_lock:
+                self.total += 1
+
+    def backward(self):
+        with self.b_lock:
+            with self.a_lock:
+                self.total -= 1

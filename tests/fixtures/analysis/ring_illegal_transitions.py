@@ -1,0 +1,93 @@
+"""Seeded violation scripts for the runtime RingProtocolChecker (§6.1).
+
+Each entry is a list of (kind, token, info) events replayed verbatim by
+tests/test_analysis.py.  ILLEGAL scripts must each produce at least one
+RingViolation; LEGAL scripts must produce none.  Loaded via exec(), not
+imported (keeps the corpus uniform: fixture files never enter
+sys.modules)."""
+
+ILLEGAL = {
+    # WB with no GH in the open append: the producer never read the header,
+    # so it cannot know where the tail is.
+    "wb_before_gh": [
+        ("lock", 0x1, {}),
+        ("wb", 0x1, {}),
+    ],
+    # Two doorbells for one append would publish the same entries twice.
+    "double_uh": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"hs": 0}),
+        ("wb", 0x1, {}),
+        ("wl", 0x1, {"won": True}),
+        ("uh", 0x1, {"ts": 1}),
+        ("uh", 0x1, {"ts": 1}),
+    ],
+    # Takeover after 1 ms against a 500 ms timeout: the holder was never
+    # given its grace period (the Case-2 clobber flake in miniature).
+    "premature_takeover": [
+        ("lock", 0x1, {}),
+        ("lock", 0x2, {"takeover": True, "waited": 0.001, "timeout": 0.5}),
+    ],
+    # Fast-forward with head <= tail: the tail was not stale, so jumping
+    # the tail to the head would discard committed-but-unconsumed entries.
+    "bad_fastforward": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"hs": 1}),
+        ("fastforward", 0x1, {"ts": 3, "hs": 1}),
+    ],
+    # Losing the WL CAS means the lock was taken over — releasing it now
+    # would unlock the new holder's critical section.
+    "unlock_after_lost_cas": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"hs": 0}),
+        ("wb", 0x1, {}),
+        ("wl", 0x1, {"won": False}),
+        ("unlock", 0x1, {}),
+    ],
+    # A WL commit that no WB preceded: the length word would describe
+    # bytes nobody wrote.
+    "wl_without_wb": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"hs": 0}),
+        ("wl", 0x1, {"won": True}),
+    ],
+}
+
+LEGAL = {
+    "single_append": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"tb": 0, "ts": 0, "hb": 0, "hs": 0}),
+        ("wb", 0x1, {}),
+        ("wl", 0x1, {"won": True}),
+        ("uh", 0x1, {"ts": 1}),
+        ("unlock", 0x1, {}),
+    ],
+    # Takeover is fine once the holder's full timeout elapsed.
+    "takeover_after_timeout": [
+        ("lock", 0x1, {}),
+        ("lock", 0x2, {"takeover": True, "waited": 0.6, "timeout": 0.5}),
+        ("gh", 0x2, {"hs": 0}),
+        ("wb", 0x2, {}),
+        ("wl", 0x2, {"won": True}),
+        ("uh", 0x2, {"ts": 1}),
+        ("unlock", 0x2, {}),
+    ],
+    # The superseded holder's delayed doorbell may rewind the published
+    # tail — the stale-tail hazard the next producer's fast-forward
+    # repairs — so it is exempt from the monotonic-tail rule.
+    "superseded_doorbell_rewind": [
+        ("lock", 0x1, {}),
+        ("gh", 0x1, {"hs": 0}),
+        ("wb", 0x1, {}),
+        ("wl", 0x1, {"won": True}),
+        ("lock", 0x2, {"takeover": True, "waited": 0.6, "timeout": 0.5}),
+        ("gh", 0x2, {"tb": 0, "ts": 0, "hb": 0, "hs": 1}),
+        ("fastforward", 0x2, {"ts": 0, "hs": 1}),
+        ("wb", 0x2, {}),
+        ("wl", 0x2, {"won": True}),
+        ("uh", 0x2, {"ts": 3}),
+        ("unlock", 0x2, {}),
+        ("uh", 0x1, {"ts": 1}),      # stale doorbell rewinds: legal
+        ("unlock", 0x1, {}),
+    ],
+}

@@ -1,0 +1,30 @@
+"""Seeded violation: blocking operations inside a `with lock:` body —
+a sleep, a ring append, and a future wait.  Any of these stalls every
+thread queued on the lock (and a producer stalled under a Python lock
+is what triggers spurious ring-lock takeovers).  Never imported —
+consumed as AST text by tests/test_analysis.py."""
+import threading
+import time
+
+
+class Sender:
+    def __init__(self, producer):
+        self._lock = threading.Lock()
+        self.producer = producer
+        self.sent = 0
+
+    def slow_send(self, msg):
+        with self._lock:
+            time.sleep(0.01)             # VIOLATION: sleep under lock
+            self.producer.append(msg)    # VIOLATION: ring append under lock
+            self.sent += 1
+
+    def wait_for(self, fut):
+        with self._lock:
+            return fut.result()          # VIOLATION: future wait under lock
+
+    def fast_send(self, msg):
+        ok = self.producer.append(msg)   # clean: append outside the lock
+        with self._lock:
+            self.sent += 1
+        return ok

@@ -1,0 +1,24 @@
+"""Seeded violation: access to a `# guarded_by:` field outside its lock.
+`bump` writes and `peek` reads `self.value` without holding `_lock`;
+`safe_bump` shows the clean pattern.  Never imported — consumed as AST
+text by tests/test_analysis.py."""
+import threading
+
+
+class Counter:
+    def __init__(self):
+        self._lock = threading.Lock()
+        self.value = 0  # guarded_by: _lock
+
+    def bump(self):
+        self.value += 1          # VIOLATION: write outside the lock
+
+    def peek(self):
+        return self.value        # VIOLATION: read outside the lock
+
+    def safe_bump(self):
+        with self._lock:
+            self.value += 1      # clean
+
+    def _drain_locked(self):
+        return self.value        # clean: caller holds the lock (suffix)

@@ -22,6 +22,7 @@ from repro.launch.dryrun_lib import (
     build_case,
     model_flops,
     rules_for,
+    xla_cost_analysis,
 )
 from repro.launch.mesh import make_smoke_mesh
 from repro.sharding.partition import partition_spec
@@ -128,7 +129,7 @@ def test_build_case_train_lowers_on_smoke_mesh():
     mesh = make_smoke_mesh()
     shape = dataclasses.replace(SHAPES["train_4k"], seq_len=32, global_batch=2)
     jf, sds = build_case(cfg, shape, mesh)
-    ca = jf.lower(*sds).compile().cost_analysis()
+    ca = xla_cost_analysis(jf.lower(*sds).compile())
     assert ca.get("flops", 0) > 0
 
 

@@ -8,6 +8,7 @@ import threading
 import numpy as np
 import pytest
 
+from repro.analysis.ring_checker import RingProtocolChecker
 from repro.core import CORRUPT, DoubleRingBuffer, RdmaFabric, RingProducer
 from repro.core.ring_buffer import BUSY_BIT, OFF_LOCK, _advance
 
@@ -18,10 +19,26 @@ try:
 except ImportError:  # pragma: no cover
     HAVE_HYPOTHESIS = False
 
+# Every ring built by make_rb carries a protocol checker; the autouse
+# fixture below asserts zero violations after each test, so all of the
+# §6.1 transitions this module drives — including the takeover, Case-7
+# and stale-tail fast-forward paths — are validated as they happen.
+_checkers = []
+
+
+@pytest.fixture(autouse=True)
+def _verify_ring_protocol():
+    _checkers.clear()
+    yield
+    for ck in _checkers:
+        ck.assert_clean()
+
 
 def make_rb(n_slots=32, buf_size=2048, name="rb"):
     fab = RdmaFabric()
     rb = DoubleRingBuffer(fab, name, n_slots=n_slots, buf_size=buf_size)
+    rb.checker = RingProtocolChecker(name)
+    _checkers.append(rb.checker)
     return fab, rb
 
 
@@ -106,8 +123,15 @@ def test_threaded_producers_all_messages_arrive():
     sent = {}
     errors = []
 
+    # All producers here are LIVE — takeover exists to recover from crashed
+    # lock holders, and a takeover of a live-but-stalled producer can clobber
+    # its in-flight entry with a same-size duplicate (Case 2).  The old
+    # 0.5 s timeout made that happen for real whenever the box was loaded
+    # enough to stall a thread mid-append; the protocol checker flagged the
+    # premature takeover.  With no crashes to recover from, the timeout only
+    # needs to be "longer than any scheduler stall": effectively infinite.
     def producer(pid):
-        p = RingProducer(rb, pid, lock_timeout_s=0.5)
+        p = RingProducer(rb, pid, lock_timeout_s=60.0)
         for i in range(N_MSGS):
             m = bytes(f"p{pid}-m{i}-".encode()) + bytes([pid]) * (i % 97)
             sent[(pid, i)] = m
@@ -121,16 +145,25 @@ def test_threaded_producers_all_messages_arrive():
     got = []
     for t in threads:
         t.start()
-    while any(t.is_alive() for t in threads) or True:
+    while True:
+        # Sample liveness BEFORE polling: every append happens-before its
+        # thread's death, so "all dead at the check, then an empty poll"
+        # proves the ring is drained.  (Checking aliveness after an empty
+        # poll raced producers appending their last messages and exiting in
+        # the window between the two — dropping the tail of the stream.)
+        alive = any(t.is_alive() for t in threads)
         item = rb.poll()
         if item is not None:
             if not isinstance(item, type(CORRUPT)):
                 got.append(item)
-        elif not any(t.is_alive() for t in threads):
+        elif not alive:
             break
     for t in threads:
         t.join()
     assert not errors
+    # no crashed producers -> the takeover path must never trigger (a
+    # takeover here would be exactly the Case-2 duplication flake)
+    assert rb.stats.lock_takeovers == 0
     assert sorted(got) == sorted(sent.values())
     # per-producer FIFO: commit order within a producer is its send order
     for pid in range(1, N_PRODUCERS + 1):
@@ -168,6 +201,7 @@ def test_case7_lost_after_wl_header_recovery():
     crash_after(op_x, ["lock", "gh", "wb", "wl"])  # died before UH
     assert y.append(b"YDATA")
     assert rb.stats.case7_recoveries == 1
+    assert rb.checker.counts.get("case7", 0) == 1  # recovery was validated
     assert rb.poll() == b"XDATA"
     assert rb.poll() == b"YDATA"
 
@@ -298,6 +332,11 @@ def test_takeover_mid_batch_never_appends_behind_consumer_head():
     assert py.append(b"W" * 20)
     assert rb.poll() == b"W" * 20
     assert rb.poll() is None
+    # the protocol checker witnessed (and validated) the recovery paths:
+    # the takeover lock, both fast-forwards, and X's superseded doorbell
+    assert rb.checker.counts.get("fastforward", 0) >= 2
+    assert rb.checker.counts.get("uh", 0) >= 2
+    assert rb.stats.lock_takeovers >= 1
 
 
 def test_theorem2_busy_slot_not_skipped():
@@ -329,6 +368,7 @@ if HAVE_HYPOTHESIS:
     ):
         fab = RdmaFabric()
         rb = DoubleRingBuffer(fab, "prb", n_slots=n_slots, buf_size=1 << buf_pow)
+        rb.checker = RingProtocolChecker("prb")
         p = RingProducer(rb, 3)
         committed, delivered = [], []
         for i, m in enumerate(msgs):
@@ -348,6 +388,7 @@ if HAVE_HYPOTHESIS:
                     delivered.append(got)
         delivered.extend(x for x in rb.drain() if not isinstance(x, type(CORRUPT)))
         assert delivered == committed
+        rb.checker.assert_clean()
 
     @settings(max_examples=25, deadline=None)
     @given(

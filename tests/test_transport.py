@@ -392,7 +392,17 @@ def test_proxy_submit_many_end_to_end():
         assert len(uids) == 16
         for i, u in enumerate(uids):
             assert proxy.wait_result(u, timeout_s=5) == np.float32(i * 2)
-    assert ws.transport_stats().sent >= 16
+    stats = ws.transport_stats()
+    assert stats.sent >= 16
+    # the suite normally runs lock-instrumented (tests/conftest.py), so
+    # contention telemetry rides along with the data-plane counters
+    from repro.analysis.runtime import instrumentation_enabled
+    if instrumentation_enabled():
+        assert "Channel._lock" in stats.lock_stats
+        ch = stats.lock_stats["Channel._lock"]
+        # send_many folds the whole batch's stats into ONE locked update
+        assert ch["acquisitions"] >= 1
+        assert ch["hold_s"] >= 0.0 and ch["contended"] >= 0
 
 
 def test_nm_queries_are_lock_safe_under_concurrent_reassignment():
