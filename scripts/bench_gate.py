@@ -2,11 +2,21 @@
 """Throughput regression gate.
 
 Runs a fresh ``benchmarks/run.py --json`` (e2e_serving suite only, unless
---fresh points at an existing dump) and compares the headline
-``e2e_onepiece_req_s`` throughput against the committed baseline JSON,
-failing if it regressed by more than --tolerance (default 10%).
+--fresh points at an existing dump) and checks two things:
 
-    PYTHONPATH=src python scripts/bench_gate.py            # vs BENCH_PR5.json
+1. regression floor — the headline ``e2e_onepiece_req_s`` throughput vs
+   the committed baseline JSON, failing on a > --tolerance drop (25%,
+   sized above the time-shared bench box's run-to-run noise);
+2. ratio gates — invariants compared WITHIN the same fresh run (both
+   sides share the machine and load, so no cross-machine skew): the
+   disaggregated system (standard serving config, microbatching
+   scheduler) must beat the monolithic baseline
+   (``e2e_onepiece_req_s >= e2e_monolithic_req_s``) — the paper's
+   headline claim — and the scheduler must never cost throughput vs
+   per-request dispatch
+   (``e2e_onepiece_req_s >= e2e_onepiece_unbatched_req_s``).
+
+    PYTHONPATH=src python scripts/bench_gate.py            # vs BENCH_PR7.json
     PYTHONPATH=src python scripts/bench_gate.py --fresh out.json
 """
 from __future__ import annotations
@@ -22,6 +32,15 @@ import tempfile
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 THROUGHPUT_RE = re.compile(r"throughput=([\d.]+)/s")
+
+#: (numerator metric, denominator metric, min ratio) — checked within the
+#: SAME fresh run.  onepiece >= monolithic is the paper's headline claim.
+RATIO_GATES = [
+    ("e2e_onepiece_req_s", "e2e_monolithic_req_s", 1.0),
+    # the adaptive partial-bucket flush (docs/perf.md): the microbatching
+    # scheduler must never cost throughput vs per-request dispatch
+    ("e2e_onepiece_req_s", "e2e_onepiece_unbatched_req_s", 1.0),
+]
 
 
 def throughput_of(bench_json: dict, metric: str) -> float:
@@ -56,20 +75,28 @@ def run_fresh(suite: str) -> dict:
 
 def main() -> int:
     ap = argparse.ArgumentParser()
-    ap.add_argument("--baseline", default=str(REPO / "BENCH_PR5.json"))
+    ap.add_argument("--baseline", default=str(REPO / "BENCH_PR7.json"))
     ap.add_argument("--metric", default="e2e_onepiece_req_s")
     ap.add_argument("--suite", default="e2e_serving",
                     help="suite to (re)run for the fresh measurement")
-    ap.add_argument("--tolerance", type=float, default=0.10,
-                    help="allowed fractional regression (0.10 = 10%%)")
+    # The ratio gates are the primary check: both sides share the run, so
+    # they are immune to host noise.  The absolute floor is a backstop —
+    # the bench box is a time-shared single core with ~15% run-to-run
+    # swing on wall-clock throughput, so its tolerance must sit above
+    # that or the gate flakes on quiet-vs-loaded hosts.
+    ap.add_argument("--tolerance", type=float, default=0.25,
+                    help="allowed fractional regression (0.25 = 25%%)")
     ap.add_argument("--fresh", default="",
                     help="existing fresh dump; skips rerunning the bench")
+    ap.add_argument("--skip-ratio", action="store_true",
+                    help="skip the within-run ratio gates (floor only)")
     args = ap.parse_args()
 
     base = json.loads(pathlib.Path(args.baseline).read_text())
     fresh = (json.loads(pathlib.Path(args.fresh).read_text()) if args.fresh
              else run_fresh(args.suite))
 
+    failed = False
     b = throughput_of(base, args.metric)
     f = throughput_of(fresh, args.metric)
     floor = b * (1.0 - args.tolerance)
@@ -79,6 +106,21 @@ def main() -> int:
     if f < floor:
         print(f"bench_gate: FAIL — regressed more than "
               f"{args.tolerance * 100:.0f}%")
+        failed = True
+
+    if not args.skip_ratio:
+        for num, den, min_ratio in RATIO_GATES:
+            n, d = throughput_of(fresh, num), throughput_of(fresh, den)
+            ratio = n / d if d else float("inf")
+            print(f"bench_gate: {num} / {den}: "
+                  f"{n:.2f}/s / {d:.2f}/s = {ratio:.2f}x "
+                  f"(min {min_ratio:.2f}x)")
+            if ratio < min_ratio:
+                print(f"bench_gate: FAIL — {num} must be >= "
+                      f"{min_ratio:.2f}x {den}")
+                failed = True
+
+    if failed:
         return 1
     print("bench_gate: OK")
     return 0

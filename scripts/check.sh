@@ -4,7 +4,9 @@
 #   scripts/check.sh --fast   # fast tier only (transport/cluster/control)
 #   scripts/check.sh --dag    # DAG tier only (routing/join/fault/property)
 #   scripts/check.sh --lint   # static analysis only (docs/static_analysis.md)
-# Extra args after the mode flag are passed through to pytest.
+#   scripts/check.sh --bench  # bench gate: fresh e2e run vs BENCH_PR7.json
+# Extra args after the mode flag are passed through to pytest (or to
+# scripts/bench_gate.py in --bench mode).
 set -euo pipefail
 cd "$(dirname "$0")/.."
 export PYTHONPATH="src${PYTHONPATH:+:$PYTHONPATH}"
@@ -14,7 +16,14 @@ case "${1:-}" in
     --fast) mode=fast; shift ;;
     --dag)  mode=dag;  shift ;;
     --lint) mode=lint; shift ;;
+    --bench) mode=bench; shift ;;
 esac
+
+if [ "$mode" = "bench" ]; then
+    echo "== bench tier: python scripts/bench_gate.py =="
+    python scripts/bench_gate.py "$@"
+    exit 0
+fi
 
 if [ "$mode" = "lint" ]; then
     echo "== lint tier: python -m repro.analysis src/repro =="

@@ -13,6 +13,12 @@ stall for unbounded time while other threads wait on the lock:
   into repo-wide head-of-line blocking (and, worse, a producer stalled
   under a Python lock is exactly what triggers spurious ring-lock
   takeovers and the Case-2 clobber);
+* the consumer doorbell: ``notify`` on a ring-like receiver — the hook
+  is arbitrary user code (typically ``Event.set``, but nothing enforces
+  that) and its contract (ring_buffer.set_notify, docs/perf.md) is
+  *strictly after the ring lock is released*; firing it under any ring
+  or channel lock reintroduces the stalled-producer takeover hazard the
+  notify design exists to avoid;
 * one-sided fabric verbs: ``writev`` / ``compare_and_swap`` /
   ``fetch_add`` always; ``read`` / ``write`` / ``read_u64`` /
   ``write_u64`` when the receiver mentions a fabric;
@@ -37,9 +43,20 @@ ALWAYS_BLOCKING_METHODS = {
     "block_until_ready", "result",
 }
 FABRIC_METHODS = {"read", "write", "read_u64", "write_u64"}
-RING_METHODS = {"append", "send", "send_parts", "send_many"}
-RING_RECEIVER_HINTS = ("producer", "channel", "router", "ring", "chan")
+RING_METHODS = {"append", "send", "send_parts", "send_many", "notify"}
+RING_RECEIVER_HINTS = ("producer", "channel", "router", "ring", "chan",
+                       "inbox", "buf")
+#: receivers matched exactly (or as a trailing segment) — "rb" as a
+#: substring hint would false-positive on names like "verbose"
+RING_RECEIVER_EXACT = ("rb",)
 WAIT_METHODS = {"join", "wait"}
+
+
+def _ring_receiver(recv: str) -> bool:
+    if any(h in recv for h in RING_RECEIVER_HINTS):
+        return True
+    return any(recv == e or recv.endswith("." + e)
+               for e in RING_RECEIVER_EXACT)
 
 
 def _call_violation(node: ast.Call, path: str) -> Violation | None:
@@ -59,7 +76,7 @@ def _call_violation(node: ast.Call, path: str) -> Violation | None:
         return Violation(RULE, path, node.lineno,
                          f"one-sided fabric op {recv}.{meth}() while "
                          "holding a lock")
-    if meth in RING_METHODS and any(h in recv for h in RING_RECEIVER_HINTS):
+    if meth in RING_METHODS and _ring_receiver(recv):
         return Violation(RULE, path, node.lineno,
                          f"ring/transport op {recv}.{meth}() while "
                          "holding a lock")

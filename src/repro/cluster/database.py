@@ -3,6 +3,7 @@ consensus-free replication, fetch-one-try-next client protocol.
 """
 from __future__ import annotations
 
+import threading
 import time
 from dataclasses import dataclass
 from typing import Any, Dict, List, Optional, Sequence
@@ -96,6 +97,11 @@ class ReplicatedDatabase:
         # down at the time): applied on the next touch once it recovers,
         # so a purged "accessed-once" result can never resurrect there.
         self._missed_purges: List[set] = [set() for _ in self.replicas]  # guarded_by: _lock
+        # broadcast doorbell: set on every successful store so result
+        # pollers (Proxy.wait_result) sleep until data lands instead of
+        # polling at a fixed interval.  Waiters clear-then-repoll; a
+        # spurious wake just costs one extra fetch.
+        self._store_event = threading.Event()
 
     def _flush_missed_purges(self, idx: int, r: DatabaseInstance) -> None:
         # Unlocked emptiness probe: the outer list never changes shape, and
@@ -128,7 +134,18 @@ class ReplicatedDatabase:
                     self._missed_purges[idx].discard(uid)
         if ok == 0:
             raise ConnectionError("all database replicas down")
+        self._store_event.set()
         return ok
+
+    def wait_store(self, timeout_s: float) -> bool:
+        """Block until *some* store lands (or the timeout passes).  The
+        event is shared by all waiters, so a waiter must re-check its own
+        uid after waking; the bounded timeout covers the multi-waiter
+        race where another waiter consumed the signal first."""
+        if self._store_event.wait(timeout_s):
+            self._store_event.clear()
+            return True
+        return False
 
     def purge(self, uid: str) -> None:
         """Explicit purge on every replica (fan-in joins claim their

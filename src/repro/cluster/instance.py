@@ -43,6 +43,7 @@ from repro.cluster.join import JOIN_DEAD, JOIN_PENDING, JoinTable
 from repro.cluster.node_manager import NodeManager
 from repro.core.batching import Coalescer, bucket_key, stack_payloads, unstack_payload
 from repro.core.messaging import WorkflowMessage
+from repro.core.profiling import profiler
 from repro.core.rdma import RdmaFabric
 from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer
 from repro.core.transport import ChannelStats, Router
@@ -88,6 +89,14 @@ class ResultDeliver:
         self.database = database
         self.joins = joins
         self.router = Router(name, buffers if buffers is not None else {}, nm=nm)
+        # Per-topology-epoch route cache: (app_id, stage) -> list of
+        # (succ, succ_idx, deps, hops).  Every NM mutation bumps
+        # ``topology_version`` (register/assign/confirm/evict), so within
+        # one epoch the successor sets and live-hop lists are EXACT — the
+        # cache removes three NM lock round-trips per message from the
+        # delivery hot path.  Swapped atomically as an (epoch, dict)
+        # tuple; racing fillers compute identical entries.
+        self._route_cache: tuple = (-1, {})
 
     def _sync_buffers(self, buffers: Optional[Dict[str, DoubleRingBuffer]]) -> None:
         if buffers is not None and buffers is not self.router.buffers:
@@ -103,20 +112,42 @@ class ResultDeliver:
                 buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> bool:
         return self.deliver_many([msg], stage, buffers) == 1
 
+    def _routes(self, app_id: int, stage: str) -> List[tuple]:
+        """Cached per-epoch successor routing for (app, stage): a list of
+        ``(succ, succ_idx, deps, hops)``, empty for a terminal stage."""
+        epoch = self.nm.topology_version()
+        cache = self._route_cache
+        if cache[0] != epoch:
+            cache = (epoch, {})
+            self._route_cache = cache
+        routes = cache[1].get((app_id, stage))
+        if routes is None:
+            wf = self.nm.workflows[app_id]
+            routes = [(succ, wf.stage_index(succ), wf.deps_of(succ),
+                       self.nm.stage_instances(succ))
+                      for succ in wf.successors(stage)]
+            cache[1][(app_id, stage)] = routes
+        return routes
+
     def deliver_many(self, msgs: List[WorkflowMessage], stage: str,
                      buffers: Optional[Dict[str, DoubleRingBuffer]] = None) -> int:
         """Deliver a batch's per-request results from `stage`; returns how
         many messages were accepted on *every* successor edge.  All
         messages must belong to one app (the scheduler's bucket key
-        guarantees it); `msgs` carry the source stage index — per-edge
-        copies are derived here via ``for_stage``."""
+        guarantees it); `msgs` carry the source stage index.
+
+        ``deliver_many`` OWNS its inputs: on the common single-successor
+        edge the messages are re-stamped to the successor's stage index
+        *in place* (``WorkflowMessage`` is mutable) instead of paying a
+        per-edge ``for_stage`` copy — callers must not reuse the message
+        objects afterwards.  Fan-out (>1 successor) still derives one
+        copy per extra edge."""
         if not msgs:
             return 0
         self._sync_buffers(buffers)
         app_id = msgs[0].app_id
-        wf = self.nm.workflows[app_id]
-        succs = wf.successors(stage)
-        if not succs:
+        routes = self._routes(app_id, stage)
+        if not routes:
             # terminal stage -> durable (transient) storage, keyed by UID
             if self.database is None:
                 return 0
@@ -135,9 +166,8 @@ class ResultDeliver:
                 ok += 1
             return ok
         ok = [True] * len(msgs)
-        for succ in succs:
-            idx = wf.stage_index(succ)
-            deps = wf.deps_of(succ)
+        single = len(routes) == 1
+        for succ, idx, deps, hops in routes:
             # A message dropped on an earlier edge is a dead request: do
             # not fan it to the remaining edges — the whole downstream
             # subgraph would run it only for a join/terminal to refuse it.
@@ -145,12 +175,19 @@ class ResultDeliver:
             if not live:
                 break
             if len(deps) > 1:
-                self._offer_fan_in(msgs, live, stage, succ, idx, deps, ok)
+                self._offer_fan_in(msgs, live, stage, succ, idx, deps, ok,
+                                   hops)
                 continue
             # single-dep edge: one round-robin pick, one doorbell-batched
             # append for the whole microbatch
-            hops = self.nm.stage_instances(succ)
-            out = [msgs[i].for_stage(idx) for i in live]
+            if single:
+                # copy diet: sole successor — re-stamp in place, zero copies
+                out = msgs if len(live) == len(msgs) \
+                    else [msgs[i] for i in live]
+                for m in out:
+                    m.stage = idx
+            else:
+                out = [msgs[i].for_stage(idx) for i in live]
             n = self._send_edge(hops, out, (app_id, succ))
             for i in live[n:]:
                 ok[i] = False
@@ -170,7 +207,7 @@ class ResultDeliver:
 
     def _offer_fan_in(self, msgs: List[WorkflowMessage], live: List[int],
                       stage: str, succ: str, idx: int, deps: List[str],
-                      ok: List[bool]) -> None:
+                      ok: List[bool], hops: List[str]) -> None:
         """Fan-in edge: offer each live partial to the join table; joins
         completed by this batch ride one doorbell-batched append to the
         fan-in stage, so microbatches re-coalesce past the join too."""
@@ -190,7 +227,6 @@ class ResultDeliver:
                 completed.append((i, m.for_stage(idx, res)))
         if not completed:
             return
-        hops = self.nm.stage_instances(succ)
         n = self._send_edge(hops, [j for _, j in completed], (app_id, succ))
         for i, _ in completed[n:]:
             ok[i] = False
@@ -218,6 +254,9 @@ class WorkflowInstance:
         pad_to_full: bool = False,
         buffers: Optional[Dict[str, DoubleRingBuffer]] = None,
         joins: Optional[JoinTable] = None,
+        event_driven: bool = True,
+        report_interval_s: Optional[float] = None,
+        inline: bool = False,
     ):
         self.name = name
         self.fabric = fabric
@@ -227,6 +266,14 @@ class WorkflowInstance:
         self.poll_interval_s = poll_interval_s
         self.max_batch = max_batch
         self.max_wait_s = max_wait_s
+        self.event_driven = event_driven
+        # Utilization reports are control traffic: each one is a replicated
+        # NM write, so they are throttled way below the data-plane poll
+        # cadence (the old poll_interval_s*4 put ~500 writes/s/instance on
+        # the NM lock).
+        self.report_interval_s = (
+            report_interval_s if report_interval_s is not None
+            else max(poll_interval_s * 4, 0.02))
         # Pad deadline-flushed partial batches up to max_batch (repeating
         # the tail request) so a jitted stage fn only ever sees one batch
         # shape per bucket — a 3-request flush would otherwise trigger a
@@ -243,6 +290,38 @@ class WorkflowInstance:
         self.stats = InstanceStats()
         self._queue: "queue.Queue[List[WorkflowMessage]]" = queue.Queue()
         self._stop = threading.Event()
+        # Event-driven wakeup (doorbell-notify): producers fire the inbox's
+        # notify hook strictly after the ring lock is released; the
+        # scheduler waits on this event instead of sleep-polling, so an
+        # idle hop wakes in scheduler-latency time, not poll_interval_s.
+        # Waiters clear-then-repoll, so a doorbell set between the empty
+        # poll and the wait is never lost.
+        self._doorbell = threading.Event()
+        if event_driven:
+            self.inbox.set_notify(self._doorbell.set)
+        # Opt-in: single-worker IM instances can run the stage fn inline on
+        # the scheduler thread — no queue handoff, no worker thread, two
+        # fewer context switches per hop.  The trade: the scheduler is also
+        # the drain-and-handoff agent, so a stage fn that blocks delays
+        # reassignment adoption until it returns.  Off by default to keep
+        # the control plane preemptive under stuck workers; serving setups
+        # with pure-compute stage fns turn it on.  CM keeps its broadcast
+        # path regardless.
+        self._inline = inline and mode != "CM" and n_workers == 1
+        # Event-driven schedulers park long when idle — the doorbell wakes
+        # them, so the timeout is only a liveness backstop; polling
+        # schedulers keep the classic short nap.
+        self._idle_wait_s = max(0.05, poll_interval_s) if event_driven \
+            else poll_interval_s
+        # Adaptive-flush grace: how long a partial bucket may sit
+        # unchanged with an empty inbox before it is flushed early —
+        # far below max_wait_s, just wide enough to ride out the
+        # producer-side gap between back-to-back appends.
+        self._flush_grace_s = min(max_wait_s * 0.5,
+                                  max(poll_interval_s * 8, 0.002))
+        # Per-topology-epoch (app_id, stage_idx) -> (stage name, fn | None)
+        # cache — same exactness argument as ResultDeliver._routes.
+        self._stage_cache: tuple = (-1, {})
         self._threads: List[threading.Thread] = []
         self._stage: Optional[str] = None
         self._version = -1
@@ -259,11 +338,12 @@ class WorkflowInstance:
             threading.Thread(target=self._scheduler_loop, daemon=True,
                              name=f"{self.name}-rs")
         ]
-        for i in range(self.n_workers):
-            self._threads.append(
-                threading.Thread(target=self._worker_loop, args=(i,), daemon=True,
-                                 name=f"{self.name}-w{i}")
-            )
+        if not self._inline:  # inline mode: the scheduler thread executes
+            for i in range(self.n_workers):
+                self._threads.append(
+                    threading.Thread(target=self._worker_loop, args=(i,),
+                                     daemon=True, name=f"{self.name}-w{i}")
+                )
         self._threads.append(
             threading.Thread(target=self._manager_loop, daemon=True,
                              name=f"{self.name}-tm")
@@ -276,6 +356,7 @@ class WorkflowInstance:
         whole set first, so no instance keeps delivering into inboxes that
         were already drained for terminal accounting)."""
         self._stop.set()
+        self._doorbell.set()  # wake a scheduler parked on the doorbell
 
     def stop(self) -> None:
         self.request_stop()
@@ -348,12 +429,19 @@ class WorkflowInstance:
             if span > 2.0:
                 self.stats.busy_s = 0.0
                 self.stats.window_start = now
-            self._stop.wait(self.poll_interval_s * 4)
+            self._stop.wait(self.report_interval_s)
 
     # ----------------------------------------------------------- scheduler
     def _dispatch(self, batch: List[WorkflowMessage]) -> None:
+        prof = profiler()
+        if prof.enabled:
+            t = time.monotonic()
+            for m in batch:
+                prof.stamp(m.uid_hex, m.stage, "dispatch", t=t)
         if self.mode == "CM":
             self._run_cm(batch)  # broadcast: all workers on one batch
+        elif self._inline:
+            self._process_batch(batch)  # single worker: run on this thread
         else:
             self._queue.put(batch)  # IM: shared queue, workers pull
 
@@ -412,21 +500,49 @@ class WorkflowInstance:
         self.stats.reassignments += 1
         self.nm.confirm_reassignment(self.name)
 
+    def _wait_for_traffic(self, timeout: float) -> None:
+        """Park until the inbox doorbell rings (event-driven) or `timeout`
+        passes.  Clear-then-repoll discipline: a doorbell set between the
+        caller's empty poll and this wait is observed here (fast return);
+        one set *during* the wait wakes it; a stale doorbell just costs
+        one extra poll.  No interleaving loses a wakeup."""
+        if not self.event_driven:
+            self._stop.wait(timeout)
+            return
+        if self._doorbell.is_set():
+            self._doorbell.clear()
+            return  # traffic landed since the last poll: repoll now
+        self._doorbell.wait(timeout)
+        self._doorbell.clear()
+
     def _scheduler_loop(self) -> None:
         coalescer = Coalescer(max_batch=self.max_batch, max_wait_s=self.max_wait_s)
+        # max_batch=1 instances bypass the coalescer entirely: no bucket
+        # bookkeeping, no deadline arithmetic — poll, unpack, dispatch.
+        bypass = self.max_batch <= 1
+        prof = profiler()
         while not self._stop.is_set():
             self._apply_reassignment(coalescer)
             item = self.inbox.poll()
             if item is None:
+                if bypass:
+                    self._wait_for_traffic(self._idle_wait_s)
+                    continue
                 for _, batch in coalescer.pop_expired():
                     self._dispatch(batch)
-                deadline = coalescer.next_deadline()
-                if deadline is None:
-                    self._stop.wait(self.poll_interval_s)
-                else:
-                    self._stop.wait(
-                        min(self.poll_interval_s,
-                            max(deadline - time.monotonic(), 0.0)))
+                # adaptive flush: the inbox is empty, so a bucket that saw
+                # no traffic for a short grace window is done growing —
+                # flush it now instead of waiting out max_wait_s
+                flushed, grace_deadline = coalescer.pop_idle(
+                    self._flush_grace_s)
+                for _, batch in flushed:
+                    self._dispatch(batch)
+                timeout = self._idle_wait_s
+                for dl in (coalescer.next_deadline(), grace_deadline):
+                    if dl is not None:
+                        timeout = min(timeout,
+                                      max(dl - time.monotonic(), 0.0))
+                self._wait_for_traffic(timeout)
                 continue
             if isinstance(item, type(CORRUPT)):
                 self.stats.dropped += 1  # checksum-failed entry, no retry (§9)
@@ -436,7 +552,9 @@ class WorkflowInstance:
             except Exception:
                 self.stats.dropped += 1
                 continue
-            if self.max_batch <= 1:
+            if prof.enabled:
+                prof.stamp(msg.uid_hex, msg.stage, "dequeue")
+            if bypass:
                 self._dispatch([msg])
                 continue
             try:
@@ -457,25 +575,43 @@ class WorkflowInstance:
             self._mark_dropped_msgs(batch)
 
     # ------------------------------------------------------------- workers
+    def _stage_entry(self, msg: WorkflowMessage) -> tuple:
+        """Per-epoch cached ``(stage name, stage fn | None)`` for the stage
+        a message *carries* — two NM lock round-trips per message become
+        one dict hit.  Exact within an epoch: workflow registration and
+        every reassignment bump ``topology_version``."""
+        epoch = self.nm.topology_version()
+        cache = self._stage_cache
+        if cache[0] != epoch:
+            cache = (epoch, {})
+            self._stage_cache = cache
+        key = (msg.app_id, msg.stage)
+        ent = cache[1].get(key)
+        if ent is None:
+            try:
+                name = self.nm.stage_name(msg.app_id, msg.stage)
+            except (KeyError, IndexError):
+                name = None
+            fn = None
+            if name is not None:
+                try:
+                    fn = self.nm.stage_fn(msg.app_id, name).fn
+                except KeyError:
+                    fn = None
+            ent = (name, fn)
+            cache[1][key] = ent
+        return ent
+
     def _stage_name_of(self, msg: WorkflowMessage) -> Optional[str]:
         """The stage a message *carries* (its stage index resolved against
         its app's workflow) — the only stage identity execution and routing
         may use.  ``self._stage`` is mutable under reassignment; a queued
         batch must never execute under the stage the instance was
         reassigned *to*."""
-        try:
-            return self.nm.stage_name(msg.app_id, msg.stage)
-        except (KeyError, IndexError):
-            return None
+        return self._stage_entry(msg)[0]
 
     def _stage_callable(self, msg: WorkflowMessage) -> Optional[Callable]:
-        stage = self._stage_name_of(msg)
-        if stage is None:
-            return None
-        try:
-            return self.nm.stage_fn(msg.app_id, stage).fn
-        except KeyError:
-            return None
+        return self._stage_entry(msg)[1]
 
     def _stack_batch(self, msgs: List[WorkflowMessage]):
         """Shared singleton/stacking policy for IM and CM: returns
@@ -513,22 +649,35 @@ class WorkflowInstance:
                 results.append(_DROP)
         return results
 
+    def _process_batch(self, msgs: List[WorkflowMessage]) -> None:
+        """Execute + deliver one batch — the body shared by the worker
+        threads and the inline (single-worker IM) scheduler path."""
+        fn = self._stage_callable(msgs[0])
+        if fn is None:
+            self.stats.dropped += len(msgs)
+            self._mark_dropped_msgs(msgs)
+            return
+        prof = profiler()
+        t0 = time.monotonic()
+        if prof.enabled:
+            for m in msgs:
+                prof.stamp(m.uid_hex, m.stage, "fn_start", t=t0)
+        results = self._run_batch(fn, msgs)
+        t1 = time.monotonic()
+        if prof.enabled:
+            for m in msgs:
+                prof.stamp(m.uid_hex, m.stage, "fn_end", t=t1)
+        self.stats.busy_s += t1 - t0
+        self.stats.batches += 1
+        self._deliver_results(msgs, results)
+
     def _worker_loop(self, widx: int) -> None:
         while not self._stop.is_set():
             try:
                 msgs = self._queue.get(timeout=self.poll_interval_s)
             except queue.Empty:
                 continue
-            fn = self._stage_callable(msgs[0])
-            if fn is None:
-                self.stats.dropped += len(msgs)
-                self._mark_dropped_msgs(msgs)
-                continue
-            t0 = time.monotonic()
-            results = self._run_batch(fn, msgs)
-            self.stats.busy_s += time.monotonic() - t0
-            self.stats.batches += 1
-            self._deliver_results(msgs, results)
+            self._process_batch(msgs)
 
     def _deliver_results(self, msgs: List[WorkflowMessage],
                          results: List[Any]) -> None:
@@ -549,9 +698,12 @@ class WorkflowInstance:
             self.stats.dropped += len(pairs)
             self._mark_dropped_msgs([m for m, _ in pairs])
             return
-        # Keep the source stage index: ResultDeliver derives one per-edge
-        # copy per successor (the DAG fan-out), so results must not be
-        # pre-advanced to any particular next index here.
+        # Keep the source stage index: ResultDeliver advances each edge's
+        # stage index itself (in place for the sole-successor case, via
+        # per-edge copies on fan-out), so results must not be pre-advanced
+        # to any particular next index here.  The `out` copies carry the
+        # new payloads; `pairs` keeps the originals (source stage intact)
+        # for the profiler's `delivered` stamp below.
         out = [m.for_stage(m.stage, r) for m, r in pairs]
         if len(out) == 1:
             ok = 1 if self.rd.deliver(out[0], stage, self.buffers) else 0
@@ -559,6 +711,11 @@ class WorkflowInstance:
             ok = self.rd.deliver_many(out, stage, self.buffers)
         self.stats.delivered += ok
         self.stats.dropped += len(out) - ok
+        prof = profiler()
+        if prof.enabled:
+            t = time.monotonic()
+            for m, _ in pairs:
+                prof.stamp(m.uid_hex, m.stage, "delivered", label=stage, t=t)
 
     def _run_cm(self, msgs: List[WorkflowMessage]) -> None:
         """Collaboration Mode: every worker gets the same (stacked) input

@@ -32,9 +32,11 @@ demotes the merge to ``{branch_name: partial}``.
 """
 from __future__ import annotations
 
+import queue
+import threading
 import time
 from dataclasses import dataclass
-from typing import Any, Dict, Optional, Sequence, Set, Tuple
+from typing import Any, Callable, Dict, Optional, Sequence, Set, Tuple
 
 from repro.analysis.runtime import make_lock
 from repro.cluster.database import ReplicatedDatabase
@@ -74,10 +76,23 @@ class JoinTable:
     ReplicatedDatabase it mirrors into)."""
 
     def __init__(self, database: Optional[ReplicatedDatabase] = None, *,
-                 ttl_s: float = 300.0, clock=time.monotonic):
+                 ttl_s: float = 300.0, clock=time.monotonic,
+                 async_mirror: bool = False):
         self.database = database
         self.ttl_s = ttl_s
         self.clock = clock
+        # Durability mirroring is off the request critical path when
+        # ``async_mirror`` is set (WorkflowSet does): every mirror op —
+        # stores AND purges — funnels through ONE FIFO queue drained by a
+        # daemon thread, so store-then-purge ordering per key is exactly
+        # the synchronous order.  ``flush_mirror`` is the barrier.  Sync
+        # (the default) keeps mirror writes immediately visible, which
+        # the durability unit tests and ``recover`` callers rely on.
+        self._mirror_q: Optional["queue.Queue[Callable[[], None]]"] = None
+        if async_mirror and database is not None:
+            self._mirror_q = queue.Queue()
+            threading.Thread(target=self._mirror_loop,
+                             name="JoinTable.mirror", daemon=True).start()
         self._lock = make_lock("JoinTable._lock")
         # (app_id, stage_idx, uid_hex) -> {branch stage name: partial payload}
         self._pending: Dict[Tuple[int, int, str], Dict[str, Any]] = {}  # guarded_by: _lock
@@ -94,10 +109,41 @@ class JoinTable:
     def _db_key(app_id: int, stage_idx: int, uid_hex: str, branch: str) -> str:
         return f"{_DB_PREFIX}{app_id}/{stage_idx}/{uid_hex}/{branch}"
 
+    # ---------------------------------------------------------- mirror plumbing
+    def _mirror_loop(self) -> None:
+        while True:
+            fn = self._mirror_q.get()
+            try:
+                fn()
+            except Exception:
+                pass  # durability is best-effort; never kill the drain
+            finally:
+                self._mirror_q.task_done()
+
+    def _mirror(self, fn: Callable[[], None]) -> None:
+        """Run one mirror op: inline (sync mode) or via the FIFO drain."""
+        if self._mirror_q is not None:
+            self._mirror_q.put(fn)
+        else:
+            fn()
+
+    def flush_mirror(self) -> None:
+        """Barrier: every mirror op enqueued so far has executed.  No-op
+        in sync mode.  Call before ``recover`` or before tearing down the
+        database replicas (``WorkflowSet.stop`` does)."""
+        if self._mirror_q is not None:
+            self._mirror_q.join()
+
     def _purge_mirror(self, key: Tuple[int, int, str], parts) -> None:
         if self.database is not None:
-            for b in parts:
-                self.database.purge(self._db_key(key[0], key[1], key[2], b))
+            branches = list(parts)
+
+            def do_purge():
+                for b in branches:
+                    self.database.purge(
+                        self._db_key(key[0], key[1], key[2], b))
+
+            self._mirror(do_purge)
 
     def _sweep_locked(self) -> None:
         """Lazy TTL GC (caller holds the lock): evict stranded joins and
@@ -147,27 +193,38 @@ class JoinTable:
         # set-wide mutex would serialize all branches of all requests).
         # Atomicity of claim-vs-slow-sibling-store is restored by a
         # post-store check: if the join was claimed or tombstoned while we
-        # were storing, our mirror entry is stale — purge it.
+        # were storing, our mirror entry is stale — purge it.  In
+        # async_mirror mode the whole op runs on the mirror drain thread
+        # instead — off the request critical path, same per-key order.
         if self.database is not None:
             if complete:
-                for b in expected:
-                    self.database.purge(self._db_key(app_id, stage_idx,
-                                                     uid_hex, b))
+                exp = list(expected)
+
+                def claim_purge():
+                    for b in exp:
+                        self.database.purge(self._db_key(app_id, stage_idx,
+                                                         uid_hex, b))
+
+                self._mirror(claim_purge)
             else:
-                try:
-                    self.database.store(
-                        self._db_key(app_id, stage_idx, uid_hex, branch),
-                        payload)
-                except ConnectionError:  # all replicas down: memory only
-                    with self._lock:
-                        self.stats.db_write_failures += 1
-                else:
-                    with self._lock:
-                        stale = (key not in self._pending
-                                 or uid_hex in self.dropped_uids)
-                    if stale:
-                        self.database.purge(
-                            self._db_key(app_id, stage_idx, uid_hex, branch))
+                def mirror_store():
+                    try:
+                        self.database.store(
+                            self._db_key(app_id, stage_idx, uid_hex, branch),
+                            payload)
+                    except ConnectionError:  # all replicas down: memory only
+                        with self._lock:
+                            self.stats.db_write_failures += 1
+                    else:
+                        with self._lock:
+                            stale = (key not in self._pending
+                                     or uid_hex in self.dropped_uids)
+                        if stale:
+                            self.database.purge(
+                                self._db_key(app_id, stage_idx, uid_hex,
+                                             branch))
+
+                self._mirror(mirror_store)
         if not complete:
             return JOIN_PENDING
         return merge_partials(parts, expected)
@@ -225,6 +282,7 @@ class JoinTable:
         route to the fan-in stage; without ``nm`` they stay pending."""
         if self.database is None:
             return 0, []
+        self.flush_mirror()  # async mode: make every queued mirror op visible
         recovered = 0
         for key, value in self.database.scan(_DB_PREFIX).items():
             try:

@@ -50,12 +50,26 @@ class Proxy:
         self.monitor = monitor
         self.joins = joins
         self.router = Router(name, buffers, nm=nm)
+        # Per-topology-epoch entrance routing cache (app_id -> entrance
+        # list): exact within an epoch because every NM mutation bumps
+        # ``topology_version``; removes the per-submit NM lock round-trips
+        # from the admission hot path.  Only successful lookups are cached
+        # (a fast-reject is not a steady state worth pinning).
+        self._entrance_cache: tuple = (-1, {})
         nm.register_instance(name, role="proxy")
 
     def _entrances(self, app_id: int) -> List[Tuple[str, int, List[str]]]:
         """Per entrance stage: (name, stage index, live instances).  Raises
         fast-reject if any entrance stage has nowhere to land — a request
         missing a branch could never complete its joins."""
+        epoch = self.nm.topology_version()
+        cache = self._entrance_cache
+        if cache[0] != epoch:
+            cache = (epoch, {})
+            self._entrance_cache = cache
+        out = cache[1].get(app_id)
+        if out is not None:
+            return out
         wf = self.nm.workflows[app_id]
         out = []
         for stage in wf.entrance_stages():
@@ -64,6 +78,7 @@ class Proxy:
                 raise Rejected(
                     f"no instances for entrance stage {stage!r} of app {app_id}")
             out.append((stage, wf.stage_index(stage), instances))
+        cache[1][app_id] = out
         return out
 
     def _mark_dropped(self, uid_hex: str) -> None:
@@ -146,13 +161,20 @@ class Proxy:
 
     def wait_result(self, uid: str, timeout_s: float = 10.0,
                     interval_s: float = 0.002) -> Any:
+        """Event-driven result wait: parks on the database's store doorbell
+        and re-polls on every store, instead of sleeping a fixed interval.
+        ``interval_s`` survives as the fallback re-poll bound (the store
+        signal is shared by all waiters, so one waiter can consume a wake
+        meant for another — the bounded wait covers that race)."""
         deadline = time.monotonic() + timeout_s
-        while time.monotonic() < deadline:
+        while True:
             v = self.poll_result(uid)
             if v is not None:
                 return v
-            time.sleep(interval_s)
-        raise TimeoutError(f"no result for {uid}")
+            remaining = deadline - time.monotonic()
+            if remaining <= 0:
+                raise TimeoutError(f"no result for {uid}")
+            self.database.wait_store(min(max(interval_s, 0.0005), remaining))
 
     def complete(self) -> None:
         if self.monitor is not None:

@@ -20,6 +20,7 @@ from repro.cluster.node_manager import (
 )
 from repro.analysis.runtime import lock_stats_snapshot
 from repro.cluster.proxy import Proxy, Rejected
+from repro.core.profiling import profiler
 from repro.core.rdma import RdmaFabric
 from repro.core.request_monitor import RequestMonitor
 from repro.core.ring_buffer import DoubleRingBuffer
@@ -45,7 +46,9 @@ class WorkflowSet:
         self.database = ReplicatedDatabase(self.db_instances)
         # Fan-in assembly + per-UID drop ledger, shared by every proxy and
         # instance; partials replicate through the database write stream.
-        self.joins = JoinTable(self.database)
+        # async_mirror keeps the durability writes off the per-message
+        # critical path (drained FIFO; ``stop`` flushes the backlog).
+        self.joins = JoinTable(self.database, async_mirror=True)
         self.proxies: List[Proxy] = []
         self._control_loop = control_loop
         self._control_interval_s = control_interval_s
@@ -89,6 +92,9 @@ class WorkflowSet:
         for inst in self.instances.values():
             total = total.merge(inst.rd.transport_stats())
         total.lock_stats = lock_stats_snapshot()
+        prof = profiler()
+        if prof.enabled:
+            total.latency = prof.snapshot()
         return total
 
     def dead_uids(self) -> set:
@@ -126,6 +132,9 @@ class WorkflowSet:
             inst.join()
         for inst in self.instances.values():
             inst.drain_terminal()
+        # Durability barrier: every queued join-mirror op has reached the
+        # database replicas before the set reports itself stopped.
+        self.joins.flush_mirror()
         self._started = False
 
     def __enter__(self) -> "WorkflowSet":

@@ -7,6 +7,7 @@
   * batching        — cross-request microbatching (stack/unstack, buckets)
   * pipeline_planner— Theorem-1 rate matching (§5)
   * request_monitor — proxy fast-reject admission control (§3.2, §5)
+  * profiling       — per-request latency spans (docs/perf.md)
 """
 from repro.core.batching import (
     Coalescer,
@@ -30,9 +31,14 @@ from repro.core.pipeline_planner import (
     steady_state_latency,
     topo_sort,
 )
+from repro.core.profiling import EVENTS, PHASES, LatencyProfiler, profiler
 from repro.core.request_monitor import RequestMonitor
 
 __all__ = [
+    "EVENTS",
+    "PHASES",
+    "LatencyProfiler",
+    "profiler",
     "AppendOp",
     "CORRUPT",
     "Channel",

@@ -186,9 +186,12 @@ class Coalescer:
     ``add`` buckets an item by key and returns a full batch the moment a
     bucket reaches ``max_batch``; ``pop_expired`` returns every bucket
     whose oldest item has waited ``max_wait_s`` (partial-batch flush —
-    bounded added latency even at trickle arrival rates); ``flush_all``
-    drains everything (shutdown).  Single-consumer: the caller (one
-    scheduler thread) owns the instance; no internal locking.
+    bounded added latency even at trickle arrival rates); ``pop_idle``
+    flushes partial buckets early once the caller observes an arrival
+    lull (adaptive flush — a trailing partial batch is not held for the
+    full ``max_wait_s`` when no more same-bucket traffic is coming);
+    ``flush_all`` drains everything (shutdown).  Single-consumer: the
+    caller (one scheduler thread) owns the instance; no internal locking.
     """
 
     def __init__(self, max_batch: int = 8, max_wait_s: float = 0.002,
@@ -200,6 +203,10 @@ class Coalescer:
         self.clock = clock
         self._buckets: Dict[Hashable, List[Any]] = {}
         self._deadlines: Dict[Hashable, float] = {}
+        # (bucket size, mark time) at the last pop_idle() sighting; a
+        # bucket still that size after the grace window has seen no
+        # traffic and is done growing
+        self._idle_marks: Dict[Hashable, Tuple[int, float]] = {}
 
     def __len__(self) -> int:
         return sum(len(v) for v in self._buckets.values())
@@ -211,6 +218,7 @@ class Coalescer:
         if not bucket:
             self._deadlines[key] = self.clock() + self.max_wait_s
         bucket.append(item)
+        self._idle_marks.pop(key, None)  # traffic: the bucket is not idle
         if len(bucket) >= self.max_batch:
             del self._buckets[key], self._deadlines[key]
             return bucket
@@ -223,7 +231,43 @@ class Coalescer:
         for key in [k for k, d in self._deadlines.items() if d <= now]:
             out.append((key, self._buckets.pop(key)))
             del self._deadlines[key]
+            self._idle_marks.pop(key, None)
         return out
+
+    def pop_idle(
+        self, grace_s: float = 0.0
+    ) -> Tuple[List[Tuple[Hashable, List[Any]]], Optional[float]]:
+        """Adaptive flush: called by the scheduler when its inbox came up
+        empty.  A partial bucket that has not grown for ``grace_s`` is
+        flushed immediately — the arrival lull means no more same-bucket
+        traffic is in flight, so waiting out ``max_wait_s`` only adds
+        latency.  A bucket that *did* grow since its mark gets a fresh
+        grace window (``add`` also clears the mark).
+
+        Returns ``(flushed, next_deadline)`` where ``next_deadline`` is
+        the absolute clock time the earliest still-marked bucket becomes
+        flushable (None if nothing is pending) — the caller's wake-up
+        bound.
+        """
+        now = self.clock()
+        out = []
+        next_deadline: Optional[float] = None
+        for key in list(self._buckets):
+            size = len(self._buckets[key])
+            mark = self._idle_marks.get(key)
+            if mark is not None and mark[0] == size:
+                if now - mark[1] >= grace_s:
+                    out.append((key, self._buckets.pop(key)))
+                    del self._deadlines[key]
+                    del self._idle_marks[key]
+                    continue
+                due = mark[1] + grace_s
+            else:
+                self._idle_marks[key] = (size, now)
+                due = now + grace_s
+            next_deadline = due if next_deadline is None \
+                else min(next_deadline, due)
+        return out, next_deadline
 
     def next_deadline(self) -> Optional[float]:
         """Earliest pending deadline (absolute clock time), or None."""
@@ -233,4 +277,5 @@ class Coalescer:
         out = [(k, v) for k, v in self._buckets.items()]
         self._buckets.clear()
         self._deadlines.clear()
+        self._idle_marks.clear()
         return out

@@ -122,8 +122,27 @@ class DoubleRingBuffer:
         # every §6.1 atomic action is mirrored as a checker event.  None in
         # production — the emission guard is one attribute load.
         self.checker = None
+        # Optional consumer-side doorbell hook (set_notify): producers call
+        # ``notify()`` after every committed append so an idle consumer can
+        # block on an Event instead of sleep-polling the ring.  Not a §6.1
+        # protocol action (the checker never sees it) and NEVER invoked
+        # while the ring lock is held — the blocking-under-lock lint
+        # enforces that for callers holding Python locks too.
+        self.notify_hook = None
         if create:
             fabric.register(region, self.total_size)
+
+    def set_notify(self, hook) -> None:
+        """Install the consumer wakeup hook (a zero-arg callable, e.g.
+        ``threading.Event.set``).  Called by producers strictly after the
+        ring lock is released; must be cheap and must not raise."""
+        self.notify_hook = hook
+
+    def notify(self) -> None:
+        """Fire the consumer doorbell, if installed (producer side)."""
+        h = self.notify_hook
+        if h is not None:
+            h()
 
     # ----------------------------------------------------------- low level
     def _slot_addr(self, slot_counter: int) -> int:
@@ -385,6 +404,7 @@ class AppendOp:
         if self.rb.checker is not None:
             self.rb.checker.event("unlock", self.token)
         self.state = "done"
+        self.rb.notify()  # doorbell: strictly after the ring lock release
         return "unlock"
 
 
@@ -569,6 +589,12 @@ class RingProducer:
                 rb.stats.produced += appended
                 if ck is not None:
                     ck.event("wl", token, won=False)
+                if appended:
+                    # the committed prefix is consumable via its busy bits
+                    # (the taker's Case-7 recovery advanced the header past
+                    # it) — wake the consumer for it; the lock is the
+                    # taker's, not ours, so this is still post-unlock.
+                    rb.notify()
                 return appended
             if ck is not None:
                 ck.event("wl", token, won=True)
@@ -587,4 +613,6 @@ class RingProducer:
         self._release(token)
         if ck is not None:
             ck.event("unlock", token)
+        if appended:
+            rb.notify()  # one doorbell for the whole batch, post-unlock
         return appended

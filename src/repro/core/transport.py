@@ -33,6 +33,7 @@ from typing import Dict, Hashable, List, Optional, Sequence
 
 from repro.analysis.runtime import make_lock
 from repro.core.messaging import WorkflowMessage
+from repro.core.profiling import profiler
 from repro.core.ring_buffer import DoubleRingBuffer, PartsLike, RingProducer
 
 
@@ -47,6 +48,10 @@ class ChannelStats:
     # dicts); populated by WorkflowSet.transport_stats() when the suite
     # runs with lock instrumentation, {} otherwise
     lock_stats: Dict[str, dict] = field(default_factory=dict)
+    # per-stage phase percentiles (repro.core.profiling snapshot);
+    # populated by WorkflowSet.transport_stats() when the profiler is
+    # enabled, {} otherwise
+    latency: Dict[str, dict] = field(default_factory=dict)
 
     def merge(self, other: "ChannelStats") -> "ChannelStats":
         return ChannelStats(
@@ -56,6 +61,7 @@ class ChannelStats:
             bytes_sent=self.bytes_sent + other.bytes_sent,
             batches=self.batches + other.batches,
             lock_stats={**self.lock_stats, **other.lock_stats},
+            latency={**self.latency, **other.latency},
         )
 
 
@@ -106,7 +112,12 @@ class Channel:
         return False
 
     def send(self, msg: WorkflowMessage) -> bool:
-        return self.send_parts(msg.pack_parts())
+        ok = self.send_parts(msg.pack_parts())
+        if ok:
+            prof = profiler()
+            if prof.enabled:
+                prof.stamp(msg.uid_hex, msg.stage, "enqueue")
+        return ok
 
     def send_many(self, msgs: Sequence[WorkflowMessage]) -> int:
         """Doorbell-batched send; returns how many messages were appended.
@@ -132,6 +143,11 @@ class Channel:
             self.stats.sent += done
             self.stats.dropped += len(parts) - done
             self.stats.bytes_sent += nbytes
+        prof = profiler()
+        if prof.enabled:
+            t = time.monotonic()
+            for m in msgs[:done]:
+                prof.stamp(m.uid_hex, m.stage, "enqueue", t=t)
         return done
 
 

@@ -26,7 +26,7 @@ import time
 import numpy as np
 
 from repro.cluster import StageSpec, WorkflowSet, WorkflowSpec
-from repro.core import RequestMonitor, critical_path, plan_dag
+from repro.core import RequestMonitor, critical_path, plan_dag, profiler
 from repro.models.aigc import (
     DAG_DEPS,
     WanI2VPipeline,
@@ -140,13 +140,19 @@ def build_set(spec: WorkflowSpec, *, counts, admit_rate: float,
               spares: int = 0) -> WorkflowSet:
     ws = WorkflowSet(name, control_loop=elastic)
     ws.register_workflow(spec)
+    # Without the elastic loop nothing reassigns instances mid-run, so the
+    # stage fn can run inline on the scheduler thread (docs/perf.md); with
+    # it, keep the worker thread so drain-and-handoff stays preemptive.
+    inline = not elastic
     for stage, n in counts.items():
         for i in range(n):
             ws.add_instance(f"{stage}_{i}", stage=stage, max_batch=max_batch,
-                            max_wait_s=max_wait_s, pad_to_full=max_batch > 1)
+                            max_wait_s=max_wait_s, pad_to_full=max_batch > 1,
+                            inline=inline)
     for i in range(spares):
         ws.add_instance(f"spare_{i}", max_batch=max_batch,
-                        max_wait_s=max_wait_s, pad_to_full=max_batch > 1)
+                        max_wait_s=max_wait_s, pad_to_full=max_batch > 1,
+                        inline=inline)
     # nm_managed: the live control loop keeps (T_X, K) tracking the actual
     # entrance-stage instance count as it rebalances (§5)
     mon = RequestMonitor(t_entrance_s=1.0 / max(admit_rate, 1e-9), k_entrance=1,
@@ -174,7 +180,14 @@ def main() -> int:
     ap.add_argument("--spare-instances", type=int, default=0,
                     help="extra idle-pool instances the control loop may "
                          "pull onto a hot stage")
+    ap.add_argument("--profile-latency", action="store_true",
+                    help="record per-request latency spans and print the "
+                         "per-stage phase breakdown (docs/perf.md)")
     args = ap.parse_args()
+
+    if args.profile_latency:
+        profiler().reset()
+        profiler().enable()
 
     pipe = WanI2VPipeline(seed=args.seed)
     cfg = pipe.cfg
@@ -249,6 +262,13 @@ def main() -> int:
           f"modeled wire time {fabric.modeled_time_s*1e3:.2f} ms")
     print(f"ring buffers: corrupt={sum(b.stats.corrupt for b in ws.buffers.values())} "
           f"takeovers={sum(b.stats.lock_takeovers for b in ws.buffers.values())}")
+    if args.profile_latency:
+        prof = profiler()
+        prof.disable()
+        print("per-stage latency (p50 ms by phase):")
+        for stage, phases in prof.timeline():
+            inner = " ".join(f"{ph}={v:.2f}" for ph, v in phases.items())
+            print(f"  {stage:>14}: {inner}")
     return 0
 
 

@@ -1,0 +1,36 @@
+"""Seeded violation: firing the consumer doorbell while holding a lock.
+The notify hook's contract (DoubleRingBuffer.set_notify, docs/perf.md)
+is *strictly after the ring lock is released* — a hook fired under a
+ring or channel lock runs arbitrary user code there, recreating the
+stalled-producer takeover hazard.  Never imported — consumed as AST
+text by tests/test_analysis.py."""
+import threading
+
+
+class Doorbell:
+    def __init__(self, rb, inbox):
+        self._lock = threading.Lock()
+        self.rb = rb
+        self.inbox = inbox
+        self.rang = 0
+
+    def bad_ring(self):
+        with self._lock:
+            self.rb.notify()         # VIOLATION: doorbell under lock
+            self.rang += 1
+
+    def bad_inbox_ring(self):
+        with self._lock:
+            self.inbox.notify()      # VIOLATION: doorbell under lock
+
+    def good_ring(self):
+        with self._lock:
+            self.rang += 1
+        self.rb.notify()             # clean: fired after release
+
+    def unrelated(self, cond, verbose):
+        # a Condition.notify / misc .notify() on a non-ring receiver is
+        # NOT the doorbell; "verbose" must not match the exact-"rb" hint
+        with self._lock:
+            cond.notify()
+            verbose.notify()

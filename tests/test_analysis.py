@@ -60,6 +60,17 @@ def test_sleep_under_lock_fixture_flagged():
     assert any(".result()" in m for m in msgs)
 
 
+def test_notify_under_lock_fixture_flagged():
+    # the doorbell hook must fire strictly after lock release: .notify()
+    # on a ring-like receiver (rb/inbox/ring/...) under a lock is flagged;
+    # Condition.notify and near-miss names ("verbose" vs exact "rb") are not
+    vs = _check("notify_under_lock.py", "blocking-under-lock")
+    msgs = [v.msg for v in vs]
+    assert len(vs) == 2
+    assert any("self.rb.notify()" in m for m in msgs)
+    assert any("self.inbox.notify()" in m for m in msgs)
+
+
 def test_host_sync_in_jit_fixture_flagged():
     vs = _check("host_sync_in_jit.py", "jit-purity")
     msgs = [v.msg for v in vs]
