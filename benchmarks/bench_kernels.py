@@ -1,6 +1,27 @@
-"""Kernel micro-benchmarks: oracle-vs-kernel agreement + reference-path
-wall time (kernel wall time on CPU is interpret-mode and not meaningful;
-the dry-run roofline covers TPU projections)."""
+"""Kernel micro-benchmarks: the dispatch-layer shape sweep.
+
+Every row times the SAME ``models/layers.py`` entry point twice — once
+with ``use_pallas=True`` (kernel path) and once with ``use_pallas=False``
+(reference path) — and records:
+
+  kernel_us / ref_us / speedup_vs_ref  — wall times + derived speedup
+  max_err / tol                        — bit-tolerance parity vs reference
+  mode / backend / dispatch            — interpret|compiled, jax backend,
+                                         and what the dispatch layer
+                                         actually traced (``dispatch=
+                                         reference`` on a forced-on row
+                                         means a silent fallback — the
+                                         bench gate fails on it)
+  flops / bytes / intensity            — analytic per-invocation counts
+  modeled_tpu_us / frac_peak_*         — V5E roofline (achieved-vs-peak at
+                                         measured time on an accelerator;
+                                         at the modeled bound on CPU)
+
+On CPU the kernels run in interpret mode, so speedup_vs_ref < 1 is
+expected there; the row exists for parity + dispatch verification and the
+roofline columns carry the TPU projection.  Shapes come from
+``benchmarks.roofline.KERNEL_SHAPES`` (decode KV 512/4k/32k, DiT seq).
+"""
 from __future__ import annotations
 
 import time
@@ -8,18 +29,18 @@ from typing import List, Tuple
 
 import jax
 import jax.numpy as jnp
-import numpy as np
 
-from repro.kernels.decode_attention import decode_attention
-from repro.kernels.decode_attention.ref import decode_attention_ref
-from repro.kernels.flash_attention import flash_attention
-from repro.kernels.flash_attention.ref import attention_ref
-from repro.kernels.rwkv6_wkv import wkv6
-from repro.kernels.rwkv6_wkv.ref import wkv6_ref
+from benchmarks.roofline import KERNEL_SHAPES, kernel_flops_bytes, roofline_fractions
+from repro.kernels import auto_interpret, kernel_mode, quantize_kv
+from repro.models import layers as L
+
+TOLS = {"flash": 1e-4, "decode": 1e-4, "decode_int8": 1e-4,
+        "ddim": 1e-5, "wkv6": 1e-4}
 
 
-def _time(fn, *args, n=5):
-    fn(*args)[0] if isinstance(fn(*args), tuple) else fn(*args)
+def _time(fn, *args, n=3):
+    out = fn(*args)  # warmup / compile
+    jax.tree.map(lambda x: x.block_until_ready(), out)
     t0 = time.perf_counter()
     for _ in range(n):
         out = fn(*args)
@@ -27,41 +48,103 @@ def _time(fn, *args, n=5):
     return (time.perf_counter() - t0) / n
 
 
+def _normal(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _entry(kind: str, p):
+    """(args, fn(use_pallas) -> out, dispatch entry name) for one shape."""
+    if kind == "flash":
+        q = _normal(0, (p["b"], p["sq"], p["h"], p["d"]))
+        k = _normal(1, (p["b"], p["sk"], p["kv"], p["d"]))
+        v = _normal(2, (p["b"], p["sk"], p["kv"], p["d"]))
+
+        def fn(up):
+            return jax.jit(lambda *a: L.attention_full(
+                *a, causal=p["causal"], use_pallas=up))(q, k, v)
+
+        return fn, "attention_full"
+    if kind == "decode":
+        q = _normal(0, (p["b"], p["h"], p["d"]))
+        kc = _normal(1, (p["b"], p["kv"], p["s"], p["d"]))
+        vc = _normal(2, (p["b"], p["kv"], p["s"], p["d"]))
+        cur = jnp.int32(p["s"] - 1)
+
+        def fn(up):
+            return jax.jit(lambda *a: L.attention_decode(
+                *a, use_pallas=up))(q, kc, vc, cur)
+
+        return fn, "attention_decode"
+    if kind == "decode_int8":
+        q = _normal(0, (p["b"], p["h"], p["d"]))
+        kc = _normal(1, (p["b"], p["s"], p["kv"], p["d"]))
+        vc = _normal(2, (p["b"], p["s"], p["kv"], p["d"]))
+        kq, ks = quantize_kv(kc)
+        vq, vs = quantize_kv(vc)
+        kq, vq = kq.transpose(0, 2, 1, 3), vq.transpose(0, 2, 1, 3)
+        cur = jnp.int32(p["s"] - 1)
+
+        def fn(up):
+            return jax.jit(lambda *a: L.attention_decode_int8(
+                *a, use_pallas=up))(q, kq, vq, ks, vs, cur)
+
+        return fn, "attention_decode_int8"
+    if kind == "ddim":
+        x = _normal(0, (p["n"],))
+        eps = _normal(1, (p["n"],))
+
+        def fn(up):
+            return jax.jit(lambda *a: L.ddim_update(
+                *a, 0.7, 0.9, use_pallas=up))(x, eps)
+
+        return fn, "ddim_update"
+    if kind == "wkv6":
+        from repro.models.rwkv6 import wkv6_scan
+
+        b, t, h, k = p["b"], p["t"], p["h"], p["k"]
+        r = _normal(0, (b, t, h, k))
+        kk = _normal(1, (b, t, h, k)) * 0.3
+        v = _normal(2, (b, t, h, k))
+        w = jax.nn.sigmoid(_normal(3, (b, t, h, k))) * 0.5 + 0.45
+        u = _normal(4, (h, k)) * 0.1
+        s0 = jnp.zeros((b, h, k, k), jnp.float32)
+
+        def fn(up):
+            return jax.jit(lambda *a: wkv6_scan(
+                *a, use_pallas=up)[0])(r, kk, v, w, u, s0)
+
+        return fn, "wkv6"
+    raise ValueError(kind)
+
+
 def run() -> List[Tuple[str, float, str]]:
     rows = []
-    key = jax.random.PRNGKey(0)
+    backend = jax.default_backend()
+    mode = kernel_mode()
+    for suffix, kind, shape in KERNEL_SHAPES:
+        fn, entry = _entry(kind, shape)
 
-    # flash attention
-    b, s, h, d = 2, 512, 4, 64
-    q, k, v = (jax.random.normal(jax.random.PRNGKey(i), (b, s, h, d)) for i in range(3))
-    t_ref = _time(jax.jit(lambda a, b_, c: attention_ref(a, b_, c, causal=True)), q, k, v)
-    out = flash_attention(q, k, v, causal=True)
-    err = float(jnp.abs(out - attention_ref(q, k, v, causal=True)).max())
-    rows.append(("kernel_flash_attention", t_ref * 1e6,
-                 f"ref_us={t_ref*1e6:.0f};max_err_vs_oracle={err:.2e}"))
+        ref = fn(False)
+        t_ref = _time(fn, False)
+        out = fn(True)  # traces the kernel path; records dispatch
+        dispatch = L.last_dispatch(entry) or "unknown"
+        t_kernel = _time(fn, True)
 
-    # wkv6
-    b, t, hh, kk = 2, 256, 4, 64
-    r = jax.random.normal(key, (b, t, hh, kk))
-    kx = jax.random.normal(jax.random.PRNGKey(1), (b, t, hh, kk)) * 0.3
-    vx = jax.random.normal(jax.random.PRNGKey(2), (b, t, hh, kk))
-    w = jax.nn.sigmoid(jax.random.normal(jax.random.PRNGKey(3), (b, t, hh, kk))) * 0.5 + 0.45
-    u = jax.random.normal(jax.random.PRNGKey(4), (hh, kk)) * 0.1
-    s0 = jnp.zeros((b, hh, kk, kk))
-    t_ref = _time(jax.jit(lambda *a: wkv6_ref(*a)), r, kx, vx, w, u, s0)
-    y, _ = wkv6(r, kx, vx, w, u, s0)
-    yr, _ = wkv6_ref(r, kx, vx, w, u, s0)
-    rows.append(("kernel_wkv6", t_ref * 1e6,
-                 f"ref_us={t_ref*1e6:.0f};max_err={float(jnp.abs(y-yr).max()):.2e}"))
-
-    # decode attention
-    b, s, h, kvh, d = 4, 2048, 8, 4, 64
-    q = jax.random.normal(key, (b, h, d))
-    kc = jax.random.normal(jax.random.PRNGKey(5), (b, s, kvh, d))
-    vc = jax.random.normal(jax.random.PRNGKey(6), (b, s, kvh, d))
-    t_ref = _time(jax.jit(lambda *a: decode_attention_ref(*a)), q, kc, vc, jnp.int32(s - 1))
-    out = decode_attention(q, kc, vc, jnp.int32(s - 1))
-    err = float(jnp.abs(out - decode_attention_ref(q, kc, vc, jnp.int32(s - 1))).max())
-    rows.append(("kernel_decode_attention", t_ref * 1e6,
-                 f"ref_us={t_ref*1e6:.0f};max_err={err:.2e}"))
+        err = float(jnp.abs(jnp.asarray(out, jnp.float32)
+                            - jnp.asarray(ref, jnp.float32)).max())
+        tol = TOLS[kind]
+        flops, bts = kernel_flops_bytes(kind, shape)
+        measured = 0.0 if auto_interpret() else t_kernel
+        rf = roofline_fractions(flops, bts, measured_s=measured)
+        rows.append((
+            f"kernel_{suffix}", t_kernel * 1e6,
+            f"kernel_us={t_kernel*1e6:.0f};ref_us={t_ref*1e6:.0f};"
+            f"speedup_vs_ref={t_ref/t_kernel:.3f};"
+            f"max_err={err:.2e};tol={tol:.0e};"
+            f"mode={mode};backend={backend};dispatch={dispatch};"
+            f"flops={flops:.3e};bytes={bts:.3e};"
+            f"intensity={rf['intensity']:.2f};"
+            f"modeled_tpu_us={rf['modeled_tpu_us']:.2f};"
+            f"frac_peak_flops={rf['frac_peak_flops']:.3f};"
+            f"frac_peak_bw={rf['frac_peak_bw']:.3f};bound={rf['bound']}"))
     return rows

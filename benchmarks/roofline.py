@@ -1,16 +1,93 @@
-"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline).
+"""Roofline table from the dry-run artifacts (EXPERIMENTS.md §Roofline),
+plus the analytic per-kernel roofline model for the Pallas kernels.
 
 Reads experiments/dryrun/*.json and emits the three-term roofline per
 (arch x shape x mesh): compute / memory / collective seconds per chip,
 dominant term, MODEL_FLOPS / HLO_FLOPS ratio, fits-HBM.
+
+The kernel half (``kernel_flops_bytes`` / ``roofline_fractions``) gives
+each bench_kernels shape its FLOP and HBM-byte count and the V5E
+achieved-vs-peak fractions; on a CPU box the fractions are evaluated at
+the *modeled* TPU time (the roofline bound itself, so the binding side
+reads 1.0), and on an accelerator at the measured kernel time.
 """
 from __future__ import annotations
 
 import json
 import pathlib
-from typing import List, Tuple
+from typing import Dict, List, Tuple
+
+from repro.configs.base import V5E
 
 DRYRUN_DIR = pathlib.Path(__file__).resolve().parent.parent / "experiments" / "dryrun"
+
+
+# ---------------------------------------------------- kernel roofline model
+#: The bench_kernels sweep: (row suffix, kind, shape params).  Decode scans
+#: KV 512 / 4k / 32k — the paper's decode_32k shape is the 32k point; the
+#: DiT row is the Wan SMALL self-attention sequence.
+KERNEL_SHAPES: List[Tuple[str, str, Dict]] = [
+    ("flash_lm_s512", "flash",
+     dict(b=2, sq=512, sk=512, h=8, kv=2, d=64, causal=True, dbytes=4)),
+    ("flash_dit_s256", "flash",
+     dict(b=2, sq=256, sk=256, h=4, kv=4, d=64, causal=False, dbytes=4)),
+    ("decode_kv512", "decode", dict(b=2, h=8, kv=2, s=512, d=64, dbytes=4)),
+    ("decode_kv4096", "decode", dict(b=2, h=8, kv=2, s=4096, d=64, dbytes=4)),
+    ("decode_kv32768", "decode", dict(b=1, h=8, kv=2, s=32768, d=64, dbytes=4)),
+    ("decode_int8_kv4096", "decode_int8", dict(b=2, h=8, kv=2, s=4096, d=64)),
+    ("ddim_step", "ddim", dict(n=2 * 4096 * 16, dbytes=4)),
+    ("wkv6_t256", "wkv6", dict(b=2, t=256, h=4, k=64, dbytes=4)),
+]
+
+
+def kernel_flops_bytes(kind: str, p: Dict) -> Tuple[float, float]:
+    """Analytic (FLOPs, HBM bytes) for one kernel invocation (2 FLOPs/MAC;
+    softmax/exp traffic ignored — both dots dominate)."""
+    if kind == "flash":
+        flops = 4.0 * p["b"] * p["h"] * p["sq"] * p["sk"] * p["d"]
+        if p.get("causal"):
+            flops *= 0.5
+        bts = p["dbytes"] * (2 * p["b"] * p["h"] * p["sq"] * p["d"]
+                             + 2 * p["b"] * p["kv"] * p["sk"] * p["d"])
+        return flops, float(bts)
+    if kind == "decode":
+        flops = 4.0 * p["b"] * p["h"] * p["s"] * p["d"]
+        bts = p["dbytes"] * (2 * p["b"] * p["kv"] * p["s"] * p["d"]
+                             + 2 * p["b"] * p["h"] * p["d"])
+        return flops, float(bts)
+    if kind == "decode_int8":
+        flops = 4.0 * p["b"] * p["h"] * p["s"] * p["d"] + 2.0 * p["b"] * p["h"] * p["s"]
+        bts = (1 * 2 * p["b"] * p["kv"] * p["s"] * p["d"]      # int8 cache
+               + 4 * 2 * p["b"] * p["kv"] * p["s"]             # f32 scales
+               + 4 * 2 * p["b"] * p["h"] * p["d"])             # q + out
+        return flops, float(bts)
+    if kind == "ddim":
+        return 3.0 * p["n"], float(p["dbytes"] * 3 * p["n"])
+    if kind == "wkv6":
+        flops = 5.0 * p["b"] * p["t"] * p["h"] * p["k"] * p["k"]
+        bts = p["dbytes"] * (5 * p["b"] * p["t"] * p["h"] * p["k"]
+                             + 2 * p["b"] * p["h"] * p["k"] * p["k"])
+        return flops, float(bts)
+    raise ValueError(kind)
+
+
+def roofline_fractions(flops: float, bts: float, measured_s: float = 0.0,
+                       hw=V5E) -> Dict[str, float]:
+    """V5E roofline for one kernel: modeled time = max(compute, memory)
+    bound; fractions are achieved-vs-peak at ``measured_s`` when given
+    (accelerator run), else at the modeled time (CPU — the binding side
+    then reads 1.0 by construction)."""
+    compute_s = flops / hw.peak_flops_bf16
+    memory_s = bts / hw.hbm_bandwidth
+    modeled_s = max(compute_s, memory_s)
+    t = measured_s or modeled_s
+    return {
+        "intensity": flops / bts,
+        "modeled_tpu_us": modeled_s * 1e6,
+        "frac_peak_flops": (flops / t) / hw.peak_flops_bf16,
+        "frac_peak_bw": (bts / t) / hw.hbm_bandwidth,
+        "bound": "compute" if compute_s >= memory_s else "memory",
+    }
 
 
 def load_all(mesh: str = "16x16"):
@@ -53,6 +130,17 @@ def run() -> List[Tuple[str, float, str]]:
         out.append((f"roofline_{mesh}", float(len(rows)),
                     f"cases={len(rows)};fits={fits};dominant=" +
                     ",".join(f"{k}:{v}" for k, v in sorted(dom.items()))))
+    # analytic per-kernel roofline (modeled V5E bound for each bench shape)
+    for suffix, kind, shape in KERNEL_SHAPES:
+        flops, bts = kernel_flops_bytes(kind, shape)
+        rf = roofline_fractions(flops, bts)
+        out.append((
+            f"kernel_roofline_{suffix}", rf["modeled_tpu_us"],
+            f"modeled_tpu_us={rf['modeled_tpu_us']:.2f};"
+            f"flops={flops:.3e};bytes={bts:.3e};"
+            f"intensity={rf['intensity']:.2f};bound={rf['bound']};"
+            f"frac_peak_flops={rf['frac_peak_flops']:.3f};"
+            f"frac_peak_bw={rf['frac_peak_bw']:.3f}"))
     return out
 
 

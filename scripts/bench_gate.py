@@ -16,8 +16,16 @@ Runs a fresh ``benchmarks/run.py --json`` (e2e_serving suite only, unless
    per-request dispatch
    (``e2e_onepiece_req_s >= e2e_onepiece_unbatched_req_s``).
 
+With ``--kernels`` it additionally runs the kernels suite and checks the
+kernel-parity floor on every ``kernel_*`` row: the dispatch layer must
+have actually routed to Pallas (``dispatch=pallas`` — a row that silently
+fell back to the reference fails) and the bit-tolerance parity must hold
+(``max_err <= tol``).  ``--skip-e2e`` drops the throughput half so the
+kernel floor can run standalone (scripts/check.sh --kernels).
+
     PYTHONPATH=src python scripts/bench_gate.py            # vs BENCH_PR7.json
     PYTHONPATH=src python scripts/bench_gate.py --fresh out.json
+    PYTHONPATH=src python scripts/bench_gate.py --kernels --skip-e2e
 """
 from __future__ import annotations
 
@@ -32,6 +40,7 @@ import tempfile
 
 REPO = pathlib.Path(__file__).resolve().parent.parent
 THROUGHPUT_RE = re.compile(r"throughput=([\d.]+)/s")
+DERIVED_FIELD_RE = re.compile(r"([a-z_]+)=([^;]+)")
 
 #: (numerator metric, denominator metric, min ratio) — checked within the
 #: SAME fresh run.  onepiece >= monolithic is the paper's headline claim.
@@ -53,6 +62,41 @@ def throughput_of(bench_json: dict, metric: str) -> float:
                     f"field in derived={row.get('derived')!r}")
             return float(m.group(1))
     raise SystemExit(f"bench_gate: no row named {metric!r}")
+
+
+def check_kernel_rows(bench_json: dict) -> bool:
+    """Kernel-parity floor: every kernel_* row must have actually traced
+    the Pallas path and sit inside its bit-tolerance.  Returns failed."""
+    failed = False
+    rows = [r for r in bench_json.get("rows", [])
+            if r.get("name", "").startswith("kernel_")
+            and not r.get("name", "").startswith("kernel_roofline_")]
+    if not rows:
+        print("bench_gate: FAIL — kernels suite produced no kernel_* rows")
+        return True
+    for row in rows:
+        fields = dict(DERIVED_FIELD_RE.findall(row.get("derived") or ""))
+        name = row["name"]
+        dispatch = fields.get("dispatch", "missing")
+        if dispatch != "pallas":
+            print(f"bench_gate: FAIL — {name}: dispatch={dispatch} "
+                  f"(kernel silently fell back to the reference)")
+            failed = True
+        try:
+            err, tol = float(fields["max_err"]), float(fields["tol"])
+        except (KeyError, ValueError):
+            print(f"bench_gate: FAIL — {name}: missing max_err/tol in "
+                  f"derived={row.get('derived')!r}")
+            failed = True
+            continue
+        status = "OK" if err <= tol else "FAIL"
+        print(f"bench_gate: {name}: max_err={err:.2e} tol={tol:.0e} "
+              f"dispatch={dispatch} mode={fields.get('mode', '?')} "
+              f"speedup_vs_ref={fields.get('speedup_vs_ref', '?')} "
+              f"[{status}]")
+        if err > tol:
+            failed = True
+    return failed
 
 
 def run_fresh(suite: str) -> dict:
@@ -90,35 +134,56 @@ def main() -> int:
                     help="existing fresh dump; skips rerunning the bench")
     ap.add_argument("--skip-ratio", action="store_true",
                     help="skip the within-run ratio gates (floor only)")
+    ap.add_argument("--kernels", action="store_true",
+                    help="also run the kernels suite and check the "
+                         "kernel-parity floor (dispatch=pallas, "
+                         "max_err <= tol on every kernel_* row)")
+    ap.add_argument("--skip-e2e", action="store_true",
+                    help="skip the throughput floor + ratio gates "
+                         "(kernel floor only; requires --kernels)")
     args = ap.parse_args()
 
-    base = json.loads(pathlib.Path(args.baseline).read_text())
-    fresh = (json.loads(pathlib.Path(args.fresh).read_text()) if args.fresh
-             else run_fresh(args.suite))
-
     failed = False
-    b = throughput_of(base, args.metric)
-    f = throughput_of(fresh, args.metric)
-    floor = b * (1.0 - args.tolerance)
-    delta = (f - b) / b * 100.0
-    print(f"bench_gate: {args.metric}: baseline {b:.2f}/s, "
-          f"fresh {f:.2f}/s ({delta:+.1f}%), floor {floor:.2f}/s")
-    if f < floor:
-        print(f"bench_gate: FAIL — regressed more than "
-              f"{args.tolerance * 100:.0f}%")
-        failed = True
 
-    if not args.skip_ratio:
-        for num, den, min_ratio in RATIO_GATES:
-            n, d = throughput_of(fresh, num), throughput_of(fresh, den)
-            ratio = n / d if d else float("inf")
-            print(f"bench_gate: {num} / {den}: "
-                  f"{n:.2f}/s / {d:.2f}/s = {ratio:.2f}x "
-                  f"(min {min_ratio:.2f}x)")
-            if ratio < min_ratio:
-                print(f"bench_gate: FAIL — {num} must be >= "
-                      f"{min_ratio:.2f}x {den}")
-                failed = True
+    if not args.skip_e2e:
+        base = json.loads(pathlib.Path(args.baseline).read_text())
+        fresh = (json.loads(pathlib.Path(args.fresh).read_text())
+                 if args.fresh else run_fresh(args.suite))
+
+        b = throughput_of(base, args.metric)
+        f = throughput_of(fresh, args.metric)
+        floor = b * (1.0 - args.tolerance)
+        delta = (f - b) / b * 100.0
+        print(f"bench_gate: {args.metric}: baseline {b:.2f}/s, "
+              f"fresh {f:.2f}/s ({delta:+.1f}%), floor {floor:.2f}/s")
+        if f < floor:
+            print(f"bench_gate: FAIL — regressed more than "
+                  f"{args.tolerance * 100:.0f}%")
+            failed = True
+
+        if not args.skip_ratio:
+            for num, den, min_ratio in RATIO_GATES:
+                n, d = throughput_of(fresh, num), throughput_of(fresh, den)
+                ratio = n / d if d else float("inf")
+                print(f"bench_gate: {num} / {den}: "
+                      f"{n:.2f}/s / {d:.2f}/s = {ratio:.2f}x "
+                      f"(min {min_ratio:.2f}x)")
+                if ratio < min_ratio:
+                    print(f"bench_gate: FAIL — {num} must be >= "
+                          f"{min_ratio:.2f}x {den}")
+                    failed = True
+
+    if args.kernels:
+        # reuse --fresh if it already has kernel rows, else run the suite
+        kfresh = None
+        if args.fresh:
+            dump = json.loads(pathlib.Path(args.fresh).read_text())
+            if any(r.get("name", "").startswith("kernel_")
+                   for r in dump.get("rows", [])):
+                kfresh = dump
+        if kfresh is None:
+            kfresh = run_fresh("kernels")
+        failed |= check_kernel_rows(kfresh)
 
     if failed:
         return 1

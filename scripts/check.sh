@@ -5,6 +5,8 @@
 #   scripts/check.sh --dag    # DAG tier only (routing/join/fault/property)
 #   scripts/check.sh --lint   # static analysis only (docs/static_analysis.md)
 #   scripts/check.sh --bench  # bench gate: fresh e2e run vs BENCH_PR7.json
+#   scripts/check.sh --kernels # kernel tier: parity suites + kernel floor
+#                              # (CPU-fast via interpret mode; docs/kernels.md)
 # Extra args after the mode flag are passed through to pytest (or to
 # scripts/bench_gate.py in --bench mode).
 set -euo pipefail
@@ -17,7 +19,17 @@ case "${1:-}" in
     --dag)  mode=dag;  shift ;;
     --lint) mode=lint; shift ;;
     --bench) mode=bench; shift ;;
+    --kernels) mode=kernels; shift ;;
 esac
+
+if [ "$mode" = "kernels" ]; then
+    echo "== kernel tier: pytest tests/test_kernels.py tests/test_kernel_dispatch.py =="
+    python -m pytest -q --durations=10 \
+        tests/test_kernels.py tests/test_kernel_dispatch.py "$@"
+    echo "== kernel tier: python scripts/bench_gate.py --kernels --skip-e2e =="
+    python scripts/bench_gate.py --kernels --skip-e2e
+    exit 0
+fi
 
 if [ "$mode" = "bench" ]; then
     echo "== bench tier: python scripts/bench_gate.py =="

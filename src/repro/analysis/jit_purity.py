@@ -16,6 +16,12 @@ Jitted functions are recognised in three forms::
 
     h = jax.jit(fn)                           # assignment form
 
+Pallas kernel bodies are jit roots too: a def passed (directly, via
+``functools.partial(kernel, ...)`` inline, or through a local
+``k = functools.partial(kernel, ...)`` alias) as the first argument of
+``pl.pallas_call`` is traced exactly like a jitted def, so host syncs
+inside it get the same treatment.
+
 Inside a jitted def — including nested defs, which covers scan/cond
 bodies — these are flagged: ``float(x)`` / ``int(x)`` / ``bool(x)`` on
 a non-constant argument, ``np.asarray`` / ``np.array`` /
@@ -27,7 +33,7 @@ Rule name: ``jit-purity``.
 from __future__ import annotations
 
 import ast
-from typing import List, Set
+from typing import Dict, List, Optional, Set
 
 from repro.analysis.common import (SourceFile, Violation, attr_chain,
                                    filter_suppressed)
@@ -55,16 +61,53 @@ def _is_jit_expr(node: ast.AST) -> bool:
     return False
 
 
+PALLAS_CALLS = ("pl.pallas_call", "pallas_call", "pallas.pallas_call",
+                "jax.experimental.pallas.pallas_call")
+
+
+def _kernel_name(node: ast.AST,
+                 partial_aliases: Dict[str, str]) -> Optional[str]:
+    """Resolve pallas_call's first arg to the kernel def's name: a bare
+    Name (through a partial alias if one is in scope) or an inline
+    ``functools.partial(kernel, ...)``."""
+    if isinstance(node, ast.Name):
+        return partial_aliases.get(node.id, node.id)
+    if isinstance(node, ast.Call):
+        fn = attr_chain(node.func)
+        if (fn in ("functools.partial", "partial") and node.args
+                and isinstance(node.args[0], ast.Name)):
+            return node.args[0].id
+    return None
+
+
 def _jitted_defs(tree: ast.Module) -> Set[ast.AST]:
-    """All function defs that are jitted, plus every def nested in one."""
+    """All function defs that are jitted — via decorator, ``jax.jit(f)``
+    assignment, or as a ``pl.pallas_call`` kernel body — plus every def
+    nested in one."""
     roots: Set[ast.AST] = set()
-    fn_by_name = {}
+    fn_by_name: Dict[str, ast.AST] = {}
+    partial_aliases: Dict[str, str] = {}
+
+    # pass 1: names, decorator roots, partial aliases
     for node in ast.walk(tree):
         if isinstance(node, (ast.FunctionDef, ast.AsyncFunctionDef)):
             fn_by_name.setdefault(node.name, node)
             if any(_is_jit_expr(d) for d in node.decorator_list):
                 roots.add(node)
         elif isinstance(node, ast.Assign):
+            # k = functools.partial(kernel, ...)
+            if (isinstance(node.value, ast.Call)
+                    and attr_chain(node.value.func) in ("functools.partial",
+                                                        "partial")
+                    and node.value.args
+                    and isinstance(node.value.args[0], ast.Name)
+                    and len(node.targets) == 1
+                    and isinstance(node.targets[0], ast.Name)):
+                partial_aliases[node.targets[0].id] = node.value.args[0].id
+
+    # pass 2: assignment-form jit and pallas_call kernel bodies
+    for node in ast.walk(tree):
+        if isinstance(node, ast.Assign):
             # h = jax.jit(fn)  -> mark fn's def if visible in this module
             if (isinstance(node.value, ast.Call)
                     and attr_chain(node.value.func) in ("jax.jit", "jit")
@@ -73,6 +116,11 @@ def _jitted_defs(tree: ast.Module) -> Set[ast.AST]:
                 name = node.value.args[0].id
                 if name in fn_by_name:
                     roots.add(fn_by_name[name])
+        elif (isinstance(node, ast.Call)
+              and attr_chain(node.func) in PALLAS_CALLS and node.args):
+            name = _kernel_name(node.args[0], partial_aliases)
+            if name and name in fn_by_name:
+                roots.add(fn_by_name[name])
 
     out: Set[ast.AST] = set()
     for r in roots:

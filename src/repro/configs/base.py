@@ -67,6 +67,8 @@ class ModelConfig:
     cache_dtype: str = ""            # "" -> same as dtype (serving knob)
     decode_unroll: int = 1           # lax.scan unroll for the decode layer loop
     attn_causal_skip: bool = False   # skip masked kv prefix blocks (§Perf)
+    use_pallas: str = "auto"         # kernel dispatch: "auto" | "on" | "off"
+                                     # (auto = Pallas on tpu/gpu; see docs/kernels.md)
     fsdp_weight_gather: bool = False # ZeRO-3: all-gather weights before dots
                                      # instead of all-reducing activations (§Perf)
     vocab_round: int = 256

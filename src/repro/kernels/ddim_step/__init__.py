@@ -1,0 +1,4 @@
+from repro.kernels.ddim_step.ops import ddim_step
+from repro.kernels.ddim_step.ref import ddim_step_ref
+
+__all__ = ["ddim_step", "ddim_step_ref"]

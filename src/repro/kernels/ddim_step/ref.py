@@ -1,0 +1,14 @@
+"""Pure-jnp oracle for one deterministic DDIM update (eta = 0).
+
+This is byte-for-byte the two-step x0/xt math from ``aigc/dit.py``'s
+sampling loop — the kernel is validated against exactly this sequence of
+operations, not an algebraic rearrangement of it.
+"""
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def ddim_step_ref(x, eps, alpha_t, alpha_prev):
+    x0 = (x - jnp.sqrt(1.0 - alpha_t) * eps) / jnp.sqrt(alpha_t)
+    return jnp.sqrt(alpha_prev) * x0 + jnp.sqrt(1.0 - alpha_prev) * eps

@@ -1,3 +1,15 @@
-from repro.kernels.decode_attention.ops import decode_attention
+from repro.kernels.decode_attention.ops import (
+    decode_attention,
+    decode_attention_cache,
+    decode_attention_int8_cache,
+    decode_attention_quantized,
+    quantize_kv,
+)
 
-__all__ = ["decode_attention"]
+__all__ = [
+    "decode_attention",
+    "decode_attention_cache",
+    "decode_attention_int8_cache",
+    "decode_attention_quantized",
+    "quantize_kv",
+]

@@ -5,10 +5,16 @@ goal is streaming the cache through VMEM exactly once).
 Grid: (batch, kv_heads, num_kv_blocks); trailing dim sequential with the
 online-softmax state (m, l, acc over the q-group rows) in VMEM scratch.
 
-BlockSpec tiling (per grid step):
-  q:    [1, 1, G, D]          — the grouped queries of one kv head
-  k,v:  [1, block_k, 1, D]    — one cache block of that head
-  out:  [1, 1, G, D]
+Two cache layouts are supported:
+  [B, S, KV, D]  — the kernel-native layout the original wrappers exposed
+  [B, KV, S, D]  — the model's serving layout (GEMM-ready per head); the
+                   ``*_cache`` variants index it directly so the dispatch
+                   layer never relayouts the cache on the decode hot path.
+
+The int8 variants consume the quantized cache from ``quantize_kv`` without
+materializing a dequantized block: k scales fold into the score matrix
+([G, bk] multiplies) and v scales fold into the probabilities before the
+value dot — O(G*bk) extra multiplies instead of O(bk*D) dequant work.
 """
 from __future__ import annotations
 
@@ -22,115 +28,107 @@ from jax.experimental.pallas import tpu as pltpu
 NEG_INF = -1e30
 
 
+def _online_softmax_block(q, k, v, kj, block_k, cur, m_ref, l_ref, acc_ref,
+                          k_scale=None, v_scale=None):
+    """One kv block of the decode online softmax.  q: [G,D] (pre-scaled);
+    k/v: [bk,D] f32; optional per-position scales [bk] fold into the score
+    columns (k) and probabilities (v)."""
+    s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
+                            preferred_element_type=jnp.float32)  # [G, bk]
+    if k_scale is not None:
+        s = s * k_scale[None, :]
+    pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
+    s = jnp.where(pos <= cur, s, NEG_INF)
+    m_prev = m_ref[...]
+    m_new = jnp.maximum(jnp.maximum(m_prev, s.max(axis=-1)), -1e29)
+    p = jnp.exp(s - m_new[:, None])
+    corr = jnp.exp(m_prev - m_new)
+    l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
+    if v_scale is not None:
+        p = p * v_scale[None, :]
+    acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
+    m_ref[...] = m_new
+
+
+def _finalize(o_ref, m_ref, l_ref, acc_ref):
+    l = jnp.maximum(l_ref[...], 1e-30)
+    o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+
+
+def _init_state(m_ref, l_ref, acc_ref):
+    m_ref[...] = jnp.full_like(m_ref, NEG_INF)
+    l_ref[...] = jnp.zeros_like(l_ref)
+    acc_ref[...] = jnp.zeros_like(acc_ref)
+
+
 def _decode_kernel(idx_ref, q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref,
-                   *, block_k: int, num_kv_blocks: int, sm_scale: float):
+                   *, block_k: int, num_kv_blocks: int, sm_scale: float,
+                   cache_layout: bool):
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _init_state(m_ref, l_ref, acc_ref)
 
     cur = idx_ref[0]
     # skip cache blocks entirely beyond the valid prefix
     @pl.when(kj * block_k <= cur)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale        # [G, D]
-        k = k_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)  # [bk, D]
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)  # [G, bk]
-        pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos <= cur, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(jnp.maximum(m_prev, s.max(axis=-1)), -1e29)
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-        v = v_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
-        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
-        m_ref[...] = m_new
+        if cache_layout:  # [1, 1, bk, D] block of a [B,KV,S,D] cache
+            k = k_ref[0, 0].astype(jnp.float32)
+            v = v_ref[0, 0].astype(jnp.float32)
+        else:             # [1, bk, 1, D] block of a [B,S,KV,D] cache
+            k = k_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
+            v = v_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
+        _online_softmax_block(q, k, v, kj, block_k, cur, m_ref, l_ref, acc_ref)
 
     @pl.when(kj == num_kv_blocks - 1)
-    def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+    def _fin():
+        _finalize(o_ref, m_ref, l_ref, acc_ref)
 
 
 def _decode_kernel_int8(idx_ref, q_ref, k_ref, v_ref, ks_ref, vs_ref, o_ref,
                         m_ref, l_ref, acc_ref, *, block_k: int,
-                        num_kv_blocks: int, sm_scale: float):
-    """int8-quantized cache variant: dequantization happens in-register
-    right before the MXU dots — HBM traffic is 1/2 of bf16, 1/4 of f32.
-    Scales are per (head, position)."""
+                        num_kv_blocks: int, sm_scale: float,
+                        cache_layout: bool):
+    """int8-quantized cache variant: the cache feeds the dots directly and
+    the per-(head, position) scales fold into scores / probabilities —
+    HBM traffic is 1/2 of bf16, 1/4 of f32, with no dequantized block ever
+    materialized in VMEM."""
     kj = pl.program_id(2)
 
     @pl.when(kj == 0)
     def _init():
-        m_ref[...] = jnp.full_like(m_ref, NEG_INF)
-        l_ref[...] = jnp.zeros_like(l_ref)
-        acc_ref[...] = jnp.zeros_like(acc_ref)
+        _init_state(m_ref, l_ref, acc_ref)
 
     cur = idx_ref[0]
 
     @pl.when(kj * block_k <= cur)
     def _body():
         q = q_ref[0, 0].astype(jnp.float32) * sm_scale                 # [G, D]
-        kq = k_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)   # [bk, D]
-        k = kq * ks_ref[0, 0][:, None]                                  # dequant
-        s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
-                                preferred_element_type=jnp.float32)
-        pos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, s.shape, 1)
-        s = jnp.where(pos <= cur, s, NEG_INF)
-        m_prev = m_ref[...]
-        m_new = jnp.maximum(jnp.maximum(m_prev, s.max(axis=-1)), -1e29)
-        p = jnp.exp(s - m_new[:, None])
-        corr = jnp.exp(m_prev - m_new)
-        l_ref[...] = l_ref[...] * corr + p.sum(axis=-1)
-        vq = v_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
-        v = vq * vs_ref[0, 0][:, None]
-        acc_ref[...] = acc_ref[...] * corr[:, None] + p @ v
-        m_ref[...] = m_new
+        if cache_layout:
+            kq = k_ref[0, 0].astype(jnp.float32)                       # [bk, D]
+            vq = v_ref[0, 0].astype(jnp.float32)
+        else:
+            kq = k_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
+            vq = v_ref[:, :, 0].reshape(block_k, -1).astype(jnp.float32)
+        ks = ks_ref[0, 0]                                              # [bk]
+        vs = vs_ref[0, 0]
+        _online_softmax_block(q, kq, vq, kj, block_k, cur, m_ref, l_ref,
+                              acc_ref, k_scale=ks, v_scale=vs)
 
     @pl.when(kj == num_kv_blocks - 1)
-    def _finalize():
-        l = jnp.maximum(l_ref[...], 1e-30)
-        o_ref[0, 0] = (acc_ref[...] / l[:, None]).astype(o_ref.dtype)
+    def _fin():
+        _finalize(o_ref, m_ref, l_ref, acc_ref)
 
 
-@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
-def decode_attention_int8_grouped(q, k_q, v_q, k_scale, v_scale, cur_index, *,
-                                  block_k=512, interpret=False):
-    """q: [B,KV,G,D]; k_q/v_q: int8 [B,S,KV,D]; scales: f32 [B,KV,S]."""
-    b, kv, g, d = q.shape
-    s = k_q.shape[1]
-    block_k = min(block_k, s)
-    assert s % block_k == 0
-    nk = s // block_k
-    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
-
-    kernel = functools.partial(_decode_kernel_int8, block_k=block_k,
-                               num_kv_blocks=nk, sm_scale=d ** -0.5)
-    return pl.pallas_call(
-        kernel,
-        grid=(b, kv, nk),
-        in_specs=[
-            pl.BlockSpec(memory_space=pltpu.SMEM),
-            pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, n, j: (b_, j, n, 0)),
-            pl.BlockSpec((1, block_k, 1, d), lambda b_, n, j: (b_, j, n, 0)),
-            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
-            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
-        ],
-        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
-        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
-        interpret=interpret,
-    )(idx, q, k_q, v_q, k_scale, v_scale)
+def _state_scratch(g, d):
+    return [
+        pltpu.VMEM((g,), jnp.float32),
+        pltpu.VMEM((g,), jnp.float32),
+        pltpu.VMEM((g, d), jnp.float32),
+    ]
 
 
 @functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
@@ -145,7 +143,8 @@ def decode_attention_grouped(q, k_cache, v_cache, cur_index, *,
     idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
 
     kernel = functools.partial(_decode_kernel, block_k=block_k,
-                               num_kv_blocks=nk, sm_scale=d ** -0.5)
+                               num_kv_blocks=nk, sm_scale=d ** -0.5,
+                               cache_layout=False)
     return pl.pallas_call(
         kernel,
         grid=(b, kv, nk),
@@ -157,10 +156,103 @@ def decode_attention_grouped(q, k_cache, v_cache, cur_index, *,
         ],
         out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
         out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
-        scratch_shapes=[
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g,), jnp.float32),
-            pltpu.VMEM((g, d), jnp.float32),
-        ],
+        scratch_shapes=_state_scratch(g, d),
         interpret=interpret,
     )(idx, q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_grouped_cache(q, k_cache, v_cache, cur_index, *,
+                                   block_k=512, interpret=False):
+    """Serving-layout variant: q [B,KV,G,D]; k/v_cache [B,KV,S,D]."""
+    b, kv, g, d = q.shape
+    s = k_cache.shape[2]
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel, block_k=block_k,
+                               num_kv_blocks=nk, sm_scale=d ** -0.5,
+                               cache_layout=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, n, j: (b_, n, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, n, j: (b_, n, j, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=_state_scratch(g, d),
+        interpret=interpret,
+    )(idx, q, k_cache, v_cache)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_int8_grouped(q, k_q, v_q, k_scale, v_scale, cur_index, *,
+                                  block_k=512, interpret=False):
+    """q: [B,KV,G,D]; k_q/v_q: int8 [B,S,KV,D]; scales: f32 [B,KV,S]."""
+    b, kv, g, d = q.shape
+    s = k_q.shape[1]
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel_int8, block_k=block_k,
+                               num_kv_blocks=nk, sm_scale=d ** -0.5,
+                               cache_layout=False)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, n, j: (b_, j, n, 0)),
+            pl.BlockSpec((1, block_k, 1, d), lambda b_, n, j: (b_, j, n, 0)),
+            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
+            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=_state_scratch(g, d),
+        interpret=interpret,
+    )(idx, q, k_q, v_q, k_scale, v_scale)
+
+
+@functools.partial(jax.jit, static_argnames=("block_k", "interpret"))
+def decode_attention_int8_grouped_cache(q, k_q, v_q, k_scale, v_scale,
+                                        cur_index, *, block_k=512,
+                                        interpret=False):
+    """Serving-layout int8 variant: q [B,KV,G,D]; k_q/v_q int8 [B,KV,S,D];
+    scales f32 [B,KV,S] — exactly what the model's int8 decode cache holds,
+    so the dispatch layer hands the cache over with zero relayout."""
+    b, kv, g, d = q.shape
+    s = k_q.shape[2]
+    block_k = min(block_k, s)
+    assert s % block_k == 0
+    nk = s // block_k
+    idx = jnp.asarray(cur_index, jnp.int32).reshape(1)
+
+    kernel = functools.partial(_decode_kernel_int8, block_k=block_k,
+                               num_kv_blocks=nk, sm_scale=d ** -0.5,
+                               cache_layout=True)
+    return pl.pallas_call(
+        kernel,
+        grid=(b, kv, nk),
+        in_specs=[
+            pl.BlockSpec(memory_space=pltpu.SMEM),
+            pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, n, j: (b_, n, j, 0)),
+            pl.BlockSpec((1, 1, block_k, d), lambda b_, n, j: (b_, n, j, 0)),
+            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
+            pl.BlockSpec((1, 1, block_k), lambda b_, n, j: (b_, n, j)),
+        ],
+        out_specs=pl.BlockSpec((1, 1, g, d), lambda b_, n, j: (b_, n, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((b, kv, g, d), q.dtype),
+        scratch_shapes=_state_scratch(g, d),
+        interpret=interpret,
+    )(idx, q, k_q, v_q, k_scale, v_scale)

@@ -11,6 +11,15 @@ BlockSpec tiling (per grid step, VMEM):
 Block sizes default to 128/256: MXU-aligned (multiples of 128 on the matmul
 dims) and small enough that q + k + v + acc tiles stay well under ~1 MiB of
 the ~128 MiB/core VMEM, leaving room for double buffering.
+
+GQA is native: q is folded to [B*H, Sq, D] while k/v stay at their real
+[B*KV, Sk, D] — the kv index map divides the q-row id by the group size, so
+a grouped cache is streamed once instead of materializing H/KV repeated
+copies (the seed wrapper's ``jnp.repeat`` cost for a 32k cache).
+
+Non-block-multiple sequence lengths are handled by zero-padding in ops.py;
+the kernel masks key positions >= ``kv_len`` so padded keys never reach the
+softmax (padded query rows are sliced off by the wrapper).
 """
 from __future__ import annotations
 
@@ -26,7 +35,7 @@ NEG_INF = -1e30
 
 def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
                   sm_scale: float, causal: bool, block_q: int, block_k: int,
-                  num_kv_blocks: int):
+                  num_kv_blocks: int, kv_len: int):
     qi = pl.program_id(1)
     kj = pl.program_id(2)
 
@@ -36,8 +45,10 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         l_ref[...] = jnp.zeros_like(l_ref)
         acc_ref[...] = jnp.zeros_like(acc_ref)
 
-    # skip kv blocks strictly above the causal diagonal
-    run = (not causal) or (kj * block_k <= qi * block_q + block_q - 1)
+    # skip kv blocks strictly above the causal diagonal or fully padded
+    run = kj * block_k < kv_len
+    if causal:
+        run = jnp.logical_and(run, kj * block_k <= qi * block_q + block_q - 1)
 
     @pl.when(run)
     def _body():
@@ -45,10 +56,12 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
         k = k_ref[0].astype(jnp.float32)                     # [bk, d]
         s = jax.lax.dot_general(q, k, (((1,), (1,)), ((), ())),
                                 preferred_element_type=jnp.float32)  # [bq, bk]
+        kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
         if causal:
             qpos = qi * block_q + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 0)
-            kpos = kj * block_k + jax.lax.broadcasted_iota(jnp.int32, (block_q, block_k), 1)
             s = jnp.where(qpos >= kpos, s, NEG_INF)
+        if kv_len % block_k:  # padded tail block: mask keys past the real length
+            s = jnp.where(kpos < kv_len, s, NEG_INF)
         m_prev = m_ref[...]
         m_new = jnp.maximum(jnp.maximum(m_prev, s.max(axis=-1)), -1e29)
         p = jnp.exp(s - m_new[:, None])
@@ -68,32 +81,40 @@ def _flash_kernel(q_ref, k_ref, v_ref, o_ref, m_ref, l_ref, acc_ref, *,
 
 @functools.partial(
     jax.jit,
-    static_argnames=("causal", "sm_scale", "block_q", "block_k", "interpret"),
+    static_argnames=("group", "causal", "sm_scale", "block_q", "block_k",
+                     "kv_len", "interpret"),
 )
-def flash_attention_bhsd(q, k, v, *, causal=True, sm_scale=None,
-                         block_q=128, block_k=128, interpret=False):
-    """q,k,v: [BH, S, D] (heads pre-folded into batch). Returns [BH, S, D]."""
-    bh, s, d = q.shape
-    block_q = min(block_q, s)
-    block_k = min(block_k, s)
-    assert s % block_q == 0 and s % block_k == 0, (s, block_q, block_k)
-    nq, nk = s // block_q, s // block_k
+def flash_attention_bhsd(q, k, v, *, group=1, causal=True, sm_scale=None,
+                         block_q=128, block_k=128, kv_len=0, interpret=False):
+    """q: [B*H, Sq, D]; k,v: [B*KV, Sk, D] with H = KV*group (heads
+    pre-folded into batch; the kv index map realizes GQA without repeats).
+    ``kv_len`` is the unpadded key length (0 -> Sk).  Returns [B*H, Sq, D].
+    """
+    bh, sq, d = q.shape
+    bkv, sk, _ = k.shape
+    assert bh == bkv * group, (bh, bkv, group)
+    if causal:
+        assert sq == sk, "causal flash requires square q/k"
+    assert sq % block_q == 0 and sk % block_k == 0, (sq, sk, block_q, block_k)
+    nq, nk = sq // block_q, sk // block_k
     scale = sm_scale if sm_scale is not None else d ** -0.5
+    kv_len = kv_len or sk
 
     kernel = functools.partial(
         _flash_kernel, sm_scale=scale, causal=causal,
-        block_q=block_q, block_k=block_k, num_kv_blocks=nk,
+        block_q=block_q, block_k=block_k, num_kv_blocks=nk, kv_len=kv_len,
     )
     return pl.pallas_call(
         kernel,
         grid=(bh, nq, nk),
         in_specs=[
             pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
-            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b, j, 0)),
+            # native GQA: q row b maps onto kv row b // group
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
+            pl.BlockSpec((1, block_k, d), lambda b, i, j: (b // group, j, 0)),
         ],
         out_specs=pl.BlockSpec((1, block_q, d), lambda b, i, j: (b, i, 0)),
-        out_shape=jax.ShapeDtypeStruct((bh, s, d), q.dtype),
+        out_shape=jax.ShapeDtypeStruct((bh, sq, d), q.dtype),
         scratch_shapes=[
             pltpu.VMEM((block_q,), jnp.float32),      # running max
             pltpu.VMEM((block_q,), jnp.float32),      # running sum

@@ -1,4 +1,5 @@
-"""Public wrapper: [B,S,H,D] layout, GQA handling, CPU interpret fallback."""
+"""Public wrapper: [B,S,H,D] layout, native GQA, padding for non-block-
+multiple lengths, interpret fallback off-accelerator."""
 from __future__ import annotations
 
 import jax
@@ -7,25 +8,52 @@ import jax.numpy as jnp
 from repro.kernels.flash_attention.kernel import flash_attention_bhsd
 
 
-def _auto_interpret() -> bool:
-    return jax.default_backend() != "tpu"
+def _round_up(x: int, m: int) -> int:
+    return ((x + m - 1) // m) * m
+
+
+def _pad_seq(x: jax.Array, target: int) -> jax.Array:
+    s = x.shape[1]
+    if s == target:
+        return x
+    return jnp.pad(x, ((0, 0), (0, target - s), (0, 0)))
 
 
 def flash_attention(q: jax.Array, k: jax.Array, v: jax.Array, *,
                     causal: bool = True, sm_scale=None,
                     block_q: int = 128, block_k: int = 128,
                     interpret=None) -> jax.Array:
-    """q: [B,S,H,D]; k,v: [B,S,KV,D] with H % KV == 0 (GQA)."""
-    b, s, h, d = q.shape
-    kv = k.shape[2]
-    if kv != h:  # GQA: repeat kv heads (kernel works per folded head)
-        rep = h // kv
-        k = jnp.repeat(k, rep, axis=2)
-        v = jnp.repeat(v, rep, axis=2)
-    qf = q.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    kf = k.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    vf = v.transpose(0, 2, 1, 3).reshape(b * h, s, d)
-    interp = _auto_interpret() if interpret is None else interpret
-    of = flash_attention_bhsd(qf, kf, vf, causal=causal, sm_scale=sm_scale,
-                              block_q=block_q, block_k=block_k, interpret=interp)
-    return of.reshape(b, h, s, d).transpose(0, 2, 1, 3)
+    """q: [B,Sq,H,D]; k,v: [B,Sk,KV,D] with H % KV == 0 (GQA).
+
+    The kv heads are NOT repeated — the kernel's index map folds the
+    grouping, so a GQA cache is streamed through VMEM once.  Sq/Sk that
+    are not block multiples are zero-padded (keys masked in-kernel by the
+    static true length, padded query rows sliced off).  Cross-attention
+    shapes (Sq != Sk) are supported for non-causal.
+    """
+    from repro.kernels import auto_interpret
+
+    b, sq, h, d = q.shape
+    sk, kv = k.shape[1], k.shape[2]
+    assert h % kv == 0, (h, kv)
+    g = h // kv
+    if causal and sq != sk:
+        raise ValueError(f"causal flash attention needs Sq == Sk, got {sq}/{sk}")
+
+    block_q = max(8, min(block_q, _round_up(sq, 8)))
+    block_k = max(8, min(block_k, _round_up(sk, 8)))
+    sq_p, sk_p = _round_up(sq, block_q), _round_up(sk, block_k)
+
+    qf = _pad_seq(q.transpose(0, 2, 1, 3).reshape(b * h, sq, d), sq_p)
+    kf = _pad_seq(k.transpose(0, 2, 1, 3).reshape(b * kv, sk, d), sk_p)
+    vf = _pad_seq(v.transpose(0, 2, 1, 3).reshape(b * kv, sk, d), sk_p)
+    if causal and sq_p != sk_p:  # keep the square-causal invariant after padding
+        tgt = max(sq_p, sk_p)
+        qf, kf, vf = _pad_seq(qf, tgt), _pad_seq(kf, tgt), _pad_seq(vf, tgt)
+        sq_p = sk_p = tgt
+
+    interp = auto_interpret() if interpret is None else interpret
+    of = flash_attention_bhsd(qf, kf, vf, group=g, causal=causal,
+                              sm_scale=sm_scale, block_q=block_q,
+                              block_k=block_k, kv_len=sk, interpret=interp)
+    return of[:, :sq].reshape(b, h, sq, d).transpose(0, 2, 1, 3)

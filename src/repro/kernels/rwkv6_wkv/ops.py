@@ -1,12 +1,12 @@
-"""Public WKV6 wrapper with CPU interpret fallback."""
+"""Public WKV6 wrapper with interpret fallback off-accelerator."""
 from __future__ import annotations
-
-import jax
 
 from repro.kernels.rwkv6_wkv.kernel import wkv6_bthk
 
 
 def wkv6(r, k, v, w, u, state, *, block_t: int = 64, interpret=None):
     """r/k/v/w: [B,T,H,K]; u: [H,K]; state: [B,H,K,K] f32."""
-    interp = (jax.default_backend() != "tpu") if interpret is None else interpret
+    from repro.kernels import auto_interpret
+
+    interp = auto_interpret() if interpret is None else interpret
     return wkv6_bthk(r, k, v, w, u, state, block_t=block_t, interpret=interp)

@@ -73,7 +73,8 @@ def unpatchify(tokens: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
 
 
 def dit_forward(params: Tree, noisy_tokens: jax.Array, t: jax.Array,
-                text_emb: jax.Array, cfg: WanPipelineConfig) -> jax.Array:
+                text_emb: jax.Array, cfg: WanPipelineConfig,
+                use_pallas=None) -> jax.Array:
     """Predict noise. noisy_tokens: [B,N,patch_dim]; t: [B]; text: [B,T,Dt]."""
     x = noisy_tokens @ params["patch_in"]
     b, n, d = x.shape
@@ -89,14 +90,14 @@ def dit_forward(params: Tree, noisy_tokens: jax.Array, t: jax.Array,
         q = jnp.einsum("bsd,dhk->bshk", h, lp["wq"])
         k = jnp.einsum("bsd,dhk->bshk", h, lp["wk"])
         v = jnp.einsum("bsd,dhk->bshk", h, lp["wv"])
-        att = L.attention_full(q, k, v, causal=False)
+        att = L.attention_full(q, k, v, causal=False, use_pallas=use_pallas)
         xx = xx + g1 * jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
         # text cross attention
         hx = L.rms_norm(xx, lp["x_norm"])
         qx = jnp.einsum("bsd,dhk->bshk", hx, lp["x_wq"])
         kx = jnp.einsum("btd,dhk->bthk", ctx, lp["x_wk"])
         vx = jnp.einsum("btd,dhk->bthk", ctx, lp["x_wv"])
-        attx = L.attention_full(qx, kx, vx, causal=False)
+        attx = L.attention_full(qx, kx, vx, causal=False, use_pallas=use_pallas)
         xx = xx + jnp.einsum("bshk,hkd->bsd", attx, lp["x_wo"])
         h = L.rms_norm(xx, lp["mlp_norm"]) * (1 + sc2) + sh2
         xx = xx + g2 * (jax.nn.gelu(h @ lp["w1"]) @ lp["w2"])
@@ -110,11 +111,14 @@ def dit_forward(params: Tree, noisy_tokens: jax.Array, t: jax.Array,
 def ddim_sample(params: Tree, z_init_tokens: jax.Array, text_emb: jax.Array,
                 cfg: WanPipelineConfig, rng: Optional[jax.Array],
                 n_steps: int = 0,
-                noise: Optional[jax.Array] = None) -> jax.Array:
+                noise: Optional[jax.Array] = None,
+                use_pallas=None) -> jax.Array:
     """Deterministic DDIM from pure noise conditioned on (image-latent
     prepended) tokens + text.  Returns denoised latent tokens.  Pass
     ``noise`` (e.g. drawn per sample for a microbatch) to skip the
-    whole-batch draw from ``rng``."""
+    whole-batch draw from ``rng``.  ``use_pallas`` routes the attention and
+    the fused DDIM update through the kernel dispatch layer (None = the
+    process-level default; see docs/kernels.md)."""
     steps = n_steps or cfg.diffusion_steps
     betas = jnp.linspace(1e-4, 0.02, 1000)
     alphas = jnp.cumprod(1.0 - betas)
@@ -129,9 +133,9 @@ def ddim_sample(params: Tree, z_init_tokens: jax.Array, text_emb: jax.Array,
         t_prev = jnp.where(i + 1 < steps, ts[jnp.minimum(i + 1, steps - 1)], 0)
         a_t, a_p = alphas[t], alphas[t_prev]
         cond = x + z_init_tokens  # image conditioning via additive latent
-        eps = dit_forward(params, cond, jnp.full((x.shape[0],), t), text_emb, cfg)
-        x0 = (x - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
-        x = jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+        eps = dit_forward(params, cond, jnp.full((x.shape[0],), t), text_emb,
+                          cfg, use_pallas=use_pallas)
+        x = L.ddim_update(x, eps, a_t, a_p, use_pallas=use_pallas)
         return x, None
 
     x, _ = jax.lax.scan(step, x, jnp.arange(steps))
@@ -148,5 +152,6 @@ def diffusion_loss(params, z_tokens, text_emb, cfg, rng):
     a = alphas[t][:, None, None]
     noise = jax.random.normal(rn, z_tokens.shape, z_tokens.dtype)
     noisy = jnp.sqrt(a) * z_tokens + jnp.sqrt(1 - a) * noise
-    pred = dit_forward(params, noisy, t, text_emb, cfg)
+    # training takes gradients through the DiT; the kernels are forward-only
+    pred = dit_forward(params, noisy, t, text_emb, cfg, use_pallas="off")
     return jnp.mean((pred - noise) ** 2)

@@ -86,10 +86,13 @@ def encode(params: Tree, frames: jax.Array, cfg: ModelConfig, *, remat=False) ->
     x = frames + _sinusoid(jnp.arange(f), d)[None].astype(frames.dtype)
     x = constrain(x, "batch", "seq_res", "act_embed")
 
+    # remat marks the train path; the Pallas kernels are forward-only
+    up = "off" if remat else cfg.use_pallas
+
     def body(xx, lp):
         h = L.rms_norm(xx, lp["norm"], cfg.norm_eps)
         q, k, v = _proj_qkv(h, lp)
-        att = L.attention_full(q, k, v, causal=False)
+        att = L.attention_full(q, k, v, causal=False, use_pallas=up)
         xx = xx + jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
         xx = xx + _mlp(xx, lp, cfg)
         return constrain(xx, "batch", "seq_res", "act_embed"), None
@@ -102,6 +105,7 @@ def encode(params: Tree, frames: jax.Array, cfg: ModelConfig, *, remat=False) ->
 
 def _decoder_stack(params, x, enc_out, cfg, mode, cache, cur_index, remat):
     """x: [B,S,D] decoder embeddings (with positions added)."""
+    up = "off" if mode == "train" else cfg.use_pallas
 
     def body(carry, xs):
         xx = carry
@@ -116,14 +120,15 @@ def _decoder_stack(params, x, enc_out, cfg, mode, cache, cur_index, remat):
             v1 = v[:, 0][:, :, None].astype(cd)
             ck = jax.lax.dynamic_update_slice_in_dim(ck, k1, cur_index, 2)
             cv = jax.lax.dynamic_update_slice_in_dim(cv, v1, cur_index, 2)
-            att = L.attention_decode(q[:, 0], ck, cv, cur_index)[:, None]
+            att = L.attention_decode(q[:, 0], ck, cv, cur_index,
+                                     use_pallas=up)[:, None]
             nc_self = (ck, cv)
         else:
             s = xx.shape[1]
             if s > 2048:
-                att = L.attention_blockwise(q, k, v, causal=True)
+                att = L.attention_blockwise(q, k, v, causal=True, use_pallas=up)
             else:
-                att = L.attention_full(q, k, v, causal=True)
+                att = L.attention_full(q, k, v, causal=True, use_pallas=up)
             nc_self = (k.transpose(0, 2, 1, 3).astype(cd),
                        v.transpose(0, 2, 1, 3).astype(cd))
         xx = xx + jnp.einsum("bshk,hkd->bsd", att, lp["wo"])
@@ -133,12 +138,13 @@ def _decoder_stack(params, x, enc_out, cfg, mode, cache, cur_index, remat):
         if mode == "decode":
             # cross K/V cached in [B,KV,F,hd] layout
             attx = L.attention_decode(qx[:, 0], xk, xv,
-                                      jnp.int32(xk.shape[2] - 1))[:, None]
+                                      jnp.int32(xk.shape[2] - 1),
+                                      use_pallas=up)[:, None]
             nc_cross = (xk, xv)
         else:
             kx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wk"])
             vx = jnp.einsum("bsd,dhk->bshk", enc_out, lp["x_wv"])
-            attx = L.attention_full(qx, kx, vx, causal=False)
+            attx = L.attention_full(qx, kx, vx, causal=False, use_pallas=up)
             cd = jnp.dtype(cfg.resolved_cache_dtype)
             nc_cross = (kx.transpose(0, 2, 1, 3).astype(cd),
                         vx.transpose(0, 2, 1, 3).astype(cd))

@@ -1,13 +1,36 @@
 """Shared model layers: norms, RoPE, attention (full / blockwise-online-
 softmax / decode), SwiGLU MLP, chunked cross-entropy.
 
-The blockwise attention here is the memory-safe pure-JAX path used by every
-full-size model (32k prefill would otherwise materialize S^2 scores); it is
-also the oracle the Pallas flash kernels are validated against.
+The pure-JAX attention paths here are the memory-safe reference used by
+every full-size model (32k prefill would otherwise materialize S^2 scores);
+they are also the oracles the Pallas kernels are validated against.
+
+Kernel dispatch
+---------------
+The public entry points (``attention_full``, ``attention_blockwise``,
+``attention_decode``, ``attention_decode_int8``, ``ddim_update``) carry a
+``use_pallas`` switch routing them to the fused kernels in
+``repro.kernels`` with zero call-site changes.  Resolution order:
+
+  1. explicit ``use_pallas=`` kwarg (bool, or "on"/"off"/"auto" string —
+     the ``ModelConfig.use_pallas`` knob threads through here),
+  2. the module override installed by ``pallas_override`` (tests, and the
+     AIGC paths whose configs predate the knob),
+  3. the ``REPRO_USE_PALLAS`` env var ("on"/"off"),
+  4. auto: Pallas on backends its lowering targets (tpu/gpu), reference
+     everywhere else.
+
+The decision happens at trace time, so a jitted model picks its path once
+per compilation.  Reference fallbacks stay in place for shapes the kernels
+do not cover (windowed layers, explicit ``q_positions``); what actually ran
+is recorded per entry point in ``last_dispatch()`` so benches and the gate
+can detect a silent fallback.  See docs/kernels.md.
 """
 from __future__ import annotations
 
+import contextlib
 import functools
+import os
 from typing import Optional
 
 import jax
@@ -16,6 +39,61 @@ import jax.numpy as jnp
 from repro.models.param import constrain
 
 NEG_INF = -1e30
+
+
+# ------------------------------------------------- kernel dispatch layer
+_PALLAS_OVERRIDE: Optional[bool] = None
+_LAST_DISPATCH: dict = {}
+
+_TRUTHY = ("on", "1", "true", "yes")
+_FALSY = ("off", "0", "false", "no")
+
+
+def resolve_use_pallas(flag=None) -> bool:
+    """Resolve a use_pallas setting to a concrete bool (trace-time)."""
+    if isinstance(flag, bool):
+        return flag
+    if isinstance(flag, str) and flag.lower() in _TRUTHY + _FALSY:
+        return flag.lower() in _TRUTHY
+    if _PALLAS_OVERRIDE is not None:
+        return _PALLAS_OVERRIDE
+    env = os.environ.get("REPRO_USE_PALLAS", "").lower()
+    if env in _TRUTHY:
+        return True
+    if env in _FALSY:
+        return False
+    from repro.kernels import COMPILED_BACKENDS
+
+    return jax.default_backend() in COMPILED_BACKENDS
+
+
+def set_pallas_override(value: Optional[bool]) -> None:
+    """Force (True/False) or release (None) the dispatch for this process."""
+    global _PALLAS_OVERRIDE
+    _PALLAS_OVERRIDE = value
+
+
+@contextlib.contextmanager
+def pallas_override(value: Optional[bool]):
+    """Scoped ``set_pallas_override`` — note the decision is trace-time, so
+    functions jitted inside the scope keep their path after it exits."""
+    prev = _PALLAS_OVERRIDE
+    set_pallas_override(value)
+    try:
+        yield
+    finally:
+        set_pallas_override(prev)
+
+
+def _record(entry: str, path: str) -> None:
+    _LAST_DISPATCH[entry] = path
+
+
+def last_dispatch(entry: Optional[str] = None):
+    """'pallas' | 'reference' per entry point, recorded at trace time."""
+    if entry is not None:
+        return _LAST_DISPATCH.get(entry)
+    return dict(_LAST_DISPATCH)
 
 
 def rms_norm(x: jax.Array, w: jax.Array, eps: float = 1e-6) -> jax.Array:
@@ -63,10 +141,19 @@ def attention_full(
     causal: bool = True,
     window: int = 0,
     q_positions: Optional[jax.Array] = None,
+    use_pallas=None,
 ) -> jax.Array:
-    """Naive full attention — smoke-scale oracle."""
+    """Naive full attention — smoke-scale oracle, and the reference branch
+    of the flash-kernel dispatch."""
     b, s, h, d = q.shape
     kv = k.shape[2]
+    if (resolve_use_pallas(use_pallas) and window == 0 and q_positions is None
+            and not (causal and s != k.shape[1])):
+        from repro.kernels import flash_attention
+
+        _record("attention_full", "pallas")
+        return flash_attention(q, k, v, causal=causal)
+    _record("attention_full", "reference")
     qg = _group_q(q, kv) * (d ** -0.5)
     scores = jnp.einsum("bsngd,btnd->bngst", qg, k).astype(jnp.float32)
     qpos = jnp.arange(s) if q_positions is None else q_positions
@@ -92,6 +179,7 @@ def attention_blockwise(
     q_block: int = 512,
     kv_block: int = 1024,
     causal_skip: bool = False,
+    use_pallas=None,
 ) -> jax.Array:
     """Memory-safe attention: scan over q blocks; global layers run an inner
     online-softmax scan over kv blocks (flash-style), windowed layers slice a
@@ -100,6 +188,12 @@ def attention_blockwise(
     long-context serving affordable)."""
     b, s, h, d = q.shape
     kv_heads = k.shape[2]
+    if resolve_use_pallas(use_pallas) and window == 0:
+        from repro.kernels import flash_attention
+
+        _record("attention_blockwise", "pallas")
+        return flash_attention(q, k, v, causal=causal)
+    _record("attention_blockwise", "reference")
     g = h // kv_heads
     q_block = min(q_block, s)
     while s % q_block:
@@ -215,9 +309,16 @@ def attention_decode(
     cur_index: jax.Array,  # so both dots run without relayout copies
     *,
     window: int = 0,
+    use_pallas=None,
 ) -> jax.Array:
     b, h, d = q.shape
     kvh = k_cache.shape[1]
+    if resolve_use_pallas(use_pallas) and window == 0:
+        from repro.kernels import decode_attention_cache
+
+        _record("attention_decode", "pallas")
+        return decode_attention_cache(q, k_cache, v_cache, cur_index)
+    _record("attention_decode", "reference")
     g = h // kvh
     qg = q.reshape(b, kvh, g, d) * (d ** -0.5)
     sc = jnp.einsum("bngd,bntd->bngt", qg, k_cache).astype(jnp.float32)
@@ -247,12 +348,20 @@ def attention_decode_int8(
     k_s: jax.Array,      # f32 [B,KV,Smax]
     v_s: jax.Array,
     cur_index: jax.Array,
+    *,
+    use_pallas=None,
 ) -> jax.Array:
     """int8-cache decode attention: scales fold into the scores (k) and the
     probabilities (v), so the quantized cache feeds the dots directly —
     HBM traffic is 1/2 of bf16 / 1/4 of f32 caches (§Perf pair C)."""
     b, h, d = q.shape
     kvh = k_q.shape[1]
+    if resolve_use_pallas(use_pallas):
+        from repro.kernels import decode_attention_int8_cache
+
+        _record("attention_decode_int8", "pallas")
+        return decode_attention_int8_cache(q, k_q, v_q, k_s, v_s, cur_index)
+    _record("attention_decode_int8", "reference")
     g = h // kvh
     qg = q.reshape(b, kvh, g, d).astype(jnp.float32) * (d ** -0.5)
     sc = jnp.einsum("bngd,bntd->bngt", qg, k_q.astype(jnp.float32))
@@ -284,6 +393,25 @@ def attention_decode_ring(
     pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     out = jnp.einsum("bngt,bntd->bngd", pr, v_cache)
     return out.reshape(b, h, d).astype(q.dtype)
+
+
+# ----------------------------------------------------------- DDIM update
+def ddim_update(x: jax.Array, eps: jax.Array, alpha_t, alpha_prev, *,
+                use_pallas=None) -> jax.Array:
+    """One deterministic (eta = 0) DDIM update for the DiT sampling loop.
+
+    Reference branch keeps the exact two-step x0/xt arithmetic from the
+    seed sampling loop (byte-compat with the DAG identity tests); the
+    kernel branch folds the combine into a single fused multiply-add pass
+    (``repro.kernels.ddim_step``)."""
+    if resolve_use_pallas(use_pallas):
+        from repro.kernels import ddim_step
+
+        _record("ddim_update", "pallas")
+        return ddim_step(x, eps, alpha_t, alpha_prev)
+    _record("ddim_update", "reference")
+    x0 = (x - jnp.sqrt(1 - alpha_t) * eps) / jnp.sqrt(alpha_t)
+    return jnp.sqrt(alpha_prev) * x0 + jnp.sqrt(1 - alpha_prev) * eps
 
 
 # ------------------------------------------------------------------- MLP

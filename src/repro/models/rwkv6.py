@@ -73,14 +73,32 @@ def abstract_params(cfg: ModelConfig) -> Tree:
 
 
 # ------------------------------------------------------------------ wkv core
-def wkv6_scan(r, k, v, w, u, state, chunk: int = 256):
+def wkv6_scan(r, k, v, w, u, state, chunk: int = 256, use_pallas=None):
     """Sequence WKV6. r/k/v/w: [B,T,H,K]; u: [H,K]; state: [B,H,K,V].
     Returns (y [B,T,H,V], final state).
+
+    ``use_pallas`` routes to the chunked ``repro.kernels.wkv6`` Pallas
+    kernel (forward-only — the train path forces the reference scan, whose
+    checkpointed chunks the backward needs).  The scan below is the oracle
+    the kernel is validated against.
 
     Time is scanned in checkpointed chunks: the backward then saves the
     state per CHUNK (T/chunk copies) instead of per step (T copies) — the
     difference between 17 GB and 70 MB of residuals at train_4k scale.
     """
+    t = r.shape[1]
+    if L.resolve_use_pallas(use_pallas):
+        bt = 64
+        while bt > 1 and t % bt:
+            bt //= 2
+        if bt >= 4:
+            from repro.kernels import wkv6
+
+            L._record("wkv6", "pallas")
+            y, fstate = wkv6(r, k, v, w, u, state.astype(jnp.float32),
+                             block_t=bt)
+            return y, fstate
+    L._record("wkv6", "reference")
 
     def step(s, xs):
         rt, kt, vt, wt = xs  # [B,H,K] x3, [B,H,K]
@@ -141,7 +159,8 @@ def _ddlerp(x, xx, lp):
     return x[:, :, None] + delta[:, :, None] * mix  # [B,T,5,D]
 
 
-def _time_mix(x, lp, cfg: ModelConfig, x_prev, wkv_state, seq_mode: bool):
+def _time_mix(x, lp, cfg: ModelConfig, x_prev, wkv_state, seq_mode: bool,
+              use_pallas=None):
     """Returns (out, new_x_prev, new_wkv_state)."""
     b, t, d = x.shape
     h, kdim = cfg.num_heads, cfg.resolved_head_dim
@@ -161,7 +180,8 @@ def _time_mix(x, lp, cfg: ModelConfig, x_prev, wkv_state, seq_mode: bool):
     )).astype(x.dtype).reshape(b, t, h, kdim)
     r = constrain(r, "batch", "seq", "ssm_heads", None)
     if seq_mode:
-        y, new_state = wkv6_scan(r, kk, vv, w, lp["bonus_u"], wkv_state)
+        y, new_state = wkv6_scan(r, kk, vv, w, lp["bonus_u"], wkv_state,
+                                 use_pallas=use_pallas)
     else:
         y, new_state = wkv6_step(
             r[:, 0], kk[:, 0], vv[:, 0], w[:, 0], lp["bonus_u"], wkv_state
@@ -187,9 +207,10 @@ def _channel_mix(x, lp, cfg: ModelConfig, x_prev, seq_mode: bool):
     return out, xn[:, -1]
 
 
-def _layer(x, lp, cfg, cache, seq_mode):
+def _layer(x, lp, cfg, cache, seq_mode, use_pallas=None):
     xp_att, xp_ffn, st = cache
-    att, nxp_att, nst = _time_mix(x, lp, cfg, xp_att, st, seq_mode)
+    att, nxp_att, nst = _time_mix(x, lp, cfg, xp_att, st, seq_mode,
+                                  use_pallas=use_pallas)
     x = x + att
     ffn, nxp_ffn = _channel_mix(x, lp, cfg, xp_ffn, seq_mode)
     x = x + ffn
@@ -209,9 +230,12 @@ def _zero_cache(cfg: ModelConfig, batch: int):
 
 
 def _stack(params, x, cfg, cache, seq_mode, remat):
+    # the Pallas wkv6 kernel is forward-only; remat marks the train path
+    up = "off" if remat else cfg.use_pallas
+
     def body(xx, xs):
         lp, c = xs
-        xx, nc = _layer(xx, lp, cfg, c, seq_mode)
+        xx, nc = _layer(xx, lp, cfg, c, seq_mode, use_pallas=up)
         return xx, nc
 
     if remat:

@@ -137,6 +137,8 @@ def _attention(x, lp, cfg: ModelConfig, mode, sincos, window, cache, cur_index):
     new_cache = None
     int8_cache = cfg.resolved_cache_dtype == "int8"
     cd = jnp.dtype(jnp.int8 if int8_cache else cfg.resolved_cache_dtype)
+    # the Pallas kernels are forward-only; train always runs the reference
+    up = "off" if mode == "train" else cfg.use_pallas
     if mode == "decode":
         # cache layout [B, KV, S, hd]: GEMM-ready per head, no relayout
         slot = (cur_index % window) if window else cur_index
@@ -149,7 +151,8 @@ def _attention(x, lp, cfg: ModelConfig, mode, sincos, window, cache, cur_index):
             ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, slot, 2)
             vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, slot, 2)
             assert not window, "int8 ring cache not implemented"
-            att = L.attention_decode_int8(q[:, 0], ck, cv, ks, vs, cur_index)[:, None]
+            att = L.attention_decode_int8(q[:, 0], ck, cv, ks, vs, cur_index,
+                                          use_pallas=up)[:, None]
             new_cache = (ck, cv, ks, vs)
         else:
             ck, cv = cache
@@ -160,15 +163,18 @@ def _attention(x, lp, cfg: ModelConfig, mode, sincos, window, cache, cur_index):
             if window:
                 att = L.attention_decode_ring(q[:, 0], ck, cv, cur_index)[:, None]
             else:
-                att = L.attention_decode(q[:, 0], ck, cv, cur_index)[:, None]
+                att = L.attention_decode(q[:, 0], ck, cv, cur_index,
+                                         use_pallas=up)[:, None]
             new_cache = (ck, cv)
     else:
         s = x.shape[1]
         if s > 2048:
             att = L.attention_blockwise(q, k, v, causal=True, window=window,
-                                        causal_skip=cfg.attn_causal_skip)
+                                        causal_skip=cfg.attn_causal_skip,
+                                        use_pallas=up)
         else:
-            att = L.attention_full(q, k, v, causal=True, window=window)
+            att = L.attention_full(q, k, v, causal=True, window=window,
+                                   use_pallas=up)
         if mode == "prefill":
             if window:
                 w = min(window, s)

@@ -41,7 +41,9 @@ class GenerationResult:
 
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params=None, *, max_len: int = 256,
-                 seed: int = 0):
+                 seed: int = 0, use_pallas: str | None = None):
+        if use_pallas is not None:  # per-engine kernel dispatch override
+            cfg = dataclasses.replace(cfg, use_pallas=use_pallas)
         self.cfg = cfg
         self.max_len = max_len
         self.params = params if params is not None else registry.init_params(

@@ -1,0 +1,48 @@
+"""Seeded violation: host-sync calls inside Pallas kernel bodies, one per
+recognised pallas_call form (partial alias, direct first arg, inline
+partial).  Never imported — consumed as AST text by tests/test_analysis.py."""
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _bad_kernel(x_ref, o_ref, *, scale):
+    peek = float(x_ref[0])             # VIOLATION: host cast in kernel body
+    o_ref[...] = x_ref[...] * scale + peek
+
+
+def run_aliased(x):
+    kernel = functools.partial(_bad_kernel, scale=2.0)
+    return pl.pallas_call(
+        kernel,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _bad_direct(x_ref, o_ref):
+    o_ref[...] = x_ref[...] * x_ref[0].item()   # VIOLATION: .item() in kernel
+
+
+def run_direct(x):
+    return pl.pallas_call(
+        _bad_direct,
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def _bad_inline(x_ref, o_ref, *, bias):
+    o_ref[...] = x_ref[...].tolist() + bias     # VIOLATION: .tolist() in kernel
+
+
+def run_inline(x):
+    return pl.pallas_call(
+        functools.partial(_bad_inline, bias=1.0),
+        out_shape=jax.ShapeDtypeStruct(x.shape, x.dtype),
+    )(x)
+
+
+def clean_kernel_launcher(x):
+    # not a kernel body and not jitted: host syncs here are fine
+    return float(jnp.sum(x))

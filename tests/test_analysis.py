@@ -84,11 +84,26 @@ def test_host_sync_in_jit_fixture_flagged():
     assert not any("clean_host_side" in m for m in msgs)
 
 
+def test_host_sync_in_pallas_kernel_fixture_flagged():
+    # kernel bodies handed to pl.pallas_call are jit roots: partial alias,
+    # direct first arg, and inline-partial forms must all resolve
+    vs = _check("host_sync_in_pallas_kernel.py", "jit-purity")
+    msgs = [v.msg for v in vs]
+    assert len(vs) == 3
+    assert any("float()" in m and "_bad_kernel" in m for m in msgs)
+    assert any(".item()" in m and "_bad_direct" in m for m in msgs)
+    assert any(".tolist()" in m and "_bad_inline" in m for m in msgs)
+    # the non-kernel launcher helpers must NOT be flagged
+    assert not any("clean_kernel_launcher" in m for m in msgs)
+    assert not any("run_" in m for m in msgs)
+
+
 def test_fixture_corpus_is_invisible_to_other_rules():
     # each fixture seeds ONLY its advertised rule's violation class; the
     # jit fixture must not trip the lock rules and vice versa
     assert not _check("host_sync_in_jit.py", "lock-order")
     assert not _check("lock_cycle.py", "jit-purity")
+    assert not _check("host_sync_in_pallas_kernel.py", "lock-order")
 
 
 # ------------------------------------------------------------ negative half

@@ -1,0 +1,232 @@
+"""Parity suite for the kernel dispatch layer (models/layers.py, see
+docs/kernels.md).
+
+The ``use_pallas`` switch must be output-invariant: every entry point
+routed to a Pallas kernel has to agree with its reference branch within
+bit tolerance, and end-to-end ``ServingEngine.generate`` (greedy decode)
+must produce the SAME tokens with the flag on or off — across all four
+model families' reduced configs, the int8 quantized-cache decode path,
+and windowed-attention configs (where the dispatch must fall back).
+"""
+from __future__ import annotations
+
+import dataclasses
+import functools
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier
+
+from repro.configs import get_config
+from repro.kernels import COMPILED_BACKENDS, auto_interpret
+from repro.models import layers as L
+
+# one family per attention/recurrence code path: GQA decode, sliding-window
+# hybrid, encoder-decoder cross-attention, rwkv6 recurrence
+ARCHS = ["qwen3-1.7b", "gemma3-27b", "whisper-large-v3", "rwkv6-7b"]
+
+
+def _rand(key, shape):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32)
+
+
+def _engines(arch: str, **overrides):
+    from repro.serving.engine import ServingEngine
+
+    cfg = dataclasses.replace(get_config(arch).reduced(),
+                              dtype="float32", **overrides)
+    off = ServingEngine(cfg, max_len=32, seed=0, use_pallas="off")
+    on = ServingEngine(cfg, off.params, max_len=32, seed=0, use_pallas="on")
+    return off, on
+
+
+# ------------------------------------------------------- flag resolution
+def test_resolve_use_pallas_precedence(monkeypatch):
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    # 1. explicit flag (bool or on/off string) always wins
+    assert L.resolve_use_pallas(True) is True
+    assert L.resolve_use_pallas(False) is False
+    assert L.resolve_use_pallas("on") is True
+    assert L.resolve_use_pallas("OFF") is False
+    with L.pallas_override(True):
+        assert L.resolve_use_pallas("off") is False
+        # 2. process override beats env + auto
+        assert L.resolve_use_pallas(None) is True
+        assert L.resolve_use_pallas("auto") is True
+    # 3. env var
+    monkeypatch.setenv("REPRO_USE_PALLAS", "on")
+    assert L.resolve_use_pallas(None) is True
+    monkeypatch.setenv("REPRO_USE_PALLAS", "off")
+    assert L.resolve_use_pallas(None) is False
+    with L.pallas_override(True):  # override still beats env
+        assert L.resolve_use_pallas(None) is True
+
+
+def test_resolve_use_pallas_auto_tracks_backend(monkeypatch):
+    monkeypatch.delenv("REPRO_USE_PALLAS", raising=False)
+    expect = jax.default_backend() in COMPILED_BACKENDS
+    assert L.resolve_use_pallas(None) is expect
+    assert L.resolve_use_pallas("auto") is expect
+    # interpret mode is exactly the complement of kernels-on-by-default
+    assert auto_interpret() is (not expect)
+
+
+def test_last_dispatch_records_per_entry():
+    q = _rand(0, (1, 64, 2, 32))
+    k = _rand(1, (1, 64, 1, 32))
+    v = _rand(2, (1, 64, 1, 32))
+    L.attention_full(q, k, v, causal=True, use_pallas=True)
+    assert L.last_dispatch("attention_full") == "pallas"
+    L.attention_full(q, k, v, causal=True, use_pallas=False)
+    assert L.last_dispatch("attention_full") == "reference"
+    assert "attention_full" in L.last_dispatch()
+
+
+# -------------------------------------------------- layer-level parity
+def test_attention_full_dispatch_parity():
+    q = _rand(0, (2, 80, 4, 32))   # non-block-multiple sequence
+    k = _rand(1, (2, 80, 2, 32))
+    v = _rand(2, (2, 80, 2, 32))
+    on = L.attention_full(q, k, v, causal=True, use_pallas=True)
+    off = L.attention_full(q, k, v, causal=True, use_pallas=False)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_attention_full_windowed_falls_back_to_reference():
+    # windowed attention has no kernel: forced-on must silently take the
+    # reference branch and record the fallback for the bench gate to see
+    q = _rand(0, (1, 64, 2, 32))
+    k = _rand(1, (1, 64, 2, 32))
+    v = _rand(2, (1, 64, 2, 32))
+    on = L.attention_full(q, k, v, causal=True, window=16, use_pallas=True)
+    assert L.last_dispatch("attention_full") == "reference"
+    off = L.attention_full(q, k, v, causal=True, window=16, use_pallas=False)
+    assert np.array_equal(np.asarray(on), np.asarray(off))
+
+
+def test_attention_decode_dispatch_parity_serving_layout():
+    b, s, h, kv, d = 2, 100, 4, 2, 32   # non-block-multiple cache
+    q = _rand(0, (b, h, d))
+    kc = _rand(1, (b, kv, s, d))        # [B,KV,S,hd] serving layout
+    vc = _rand(2, (b, kv, s, d))
+    for cur in (0, 37, s - 1):
+        on = L.attention_decode(q, kc, vc, jnp.int32(cur), use_pallas=True)
+        off = L.attention_decode(q, kc, vc, jnp.int32(cur), use_pallas=False)
+        np.testing.assert_allclose(np.asarray(on), np.asarray(off),
+                                   atol=2e-5, rtol=2e-5)
+    assert L.last_dispatch("attention_decode") == "reference"
+    L.attention_decode(q, kc, vc, jnp.int32(5), use_pallas=True)
+    assert L.last_dispatch("attention_decode") == "pallas"
+
+
+def test_attention_decode_int8_dispatch_parity():
+    from repro.kernels import quantize_kv
+
+    b, s, h, kv, d = 2, 96, 4, 2, 32
+    q = _rand(0, (b, h, d))
+    kc = _rand(1, (b, s, kv, d))
+    vc = _rand(2, (b, s, kv, d))
+    k_q, k_s = quantize_kv(kc)          # scales [B,KV,S]
+    v_q, v_s = quantize_kv(vc)
+    k_q, v_q = k_q.transpose(0, 2, 1, 3), v_q.transpose(0, 2, 1, 3)
+    on = L.attention_decode_int8(q, k_q, v_q, k_s, v_s, jnp.int32(s - 1),
+                                 use_pallas=True)
+    assert L.last_dispatch("attention_decode_int8") == "pallas"
+    off = L.attention_decode_int8(q, k_q, v_q, k_s, v_s, jnp.int32(s - 1),
+                                  use_pallas=False)
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_ddim_update_reference_is_seed_math():
+    # the reference branch must stay byte-identical to the seed's two-step
+    # DDIM expression (the DAG identity tests depend on it)
+    x, eps = _rand(0, (2, 64, 16)), _rand(1, (2, 64, 16))
+    a_t, a_p = 0.7, 0.9
+    x0 = (x - jnp.sqrt(1 - a_t) * eps) / jnp.sqrt(a_t)
+    seed = jnp.sqrt(a_p) * x0 + jnp.sqrt(1 - a_p) * eps
+    off = L.ddim_update(x, eps, a_t, a_p, use_pallas=False)
+    assert np.array_equal(np.asarray(off), np.asarray(seed))
+    on = L.ddim_update(x, eps, a_t, a_p, use_pallas=True)
+    assert L.last_dispatch("ddim_update") == "pallas"
+    np.testing.assert_allclose(np.asarray(on), np.asarray(seed),
+                               atol=1e-5, rtol=1e-5)
+
+
+# ------------------------------------------- end-to-end serving parity
+@pytest.mark.parametrize("arch", ARCHS)
+def test_serving_generate_invariant_under_dispatch(arch):
+    """Regression: greedy generate must emit the SAME tokens on/off."""
+    off, on = _engines(arch)
+    prompts = (np.arange(8, dtype=np.int32).reshape(2, 4) % 50) + 1
+    r_off = off.generate(prompts, steps=8)
+    r_on = on.generate(prompts, steps=8)
+    assert np.array_equal(r_off.tokens, r_on.tokens), (
+        f"{arch}: tokens diverged under use_pallas")
+    # the on-engine's decode trace must actually have hit a kernel
+    entry = "wkv6" if arch == "rwkv6-7b" else "attention_decode"
+    if arch != "gemma3-27b":  # gemma3's last decode layer is windowed
+        assert L.last_dispatch(entry) == "pallas"
+
+
+def test_serving_generate_invariant_int8_cache():
+    off, on = _engines("qwen3-1.7b", cache_dtype="int8")
+    prompts = (np.arange(8, dtype=np.int32).reshape(2, 4) % 50) + 1
+    r_off = off.generate(prompts, steps=8)
+    r_on = on.generate(prompts, steps=8)
+    assert np.array_equal(r_off.tokens, r_on.tokens)
+    assert L.last_dispatch("attention_decode_int8") == "pallas"
+
+
+# --------------------------------------------------- AIGC (DiT) parity
+def _wan_setup():
+    from repro.configs.wan_i2v import SMALL
+    from repro.models.aigc import dit
+    from repro.models.param import init_tree
+
+    cfg = SMALL
+    params = init_tree(jax.random.PRNGKey(0), dit.abstract_params(cfg))
+    patch_dim = cfg.patch * cfg.patch * cfg.vae_latent_ch
+    z = _rand(1, (1, cfg.video_tokens, patch_dim)) * 0.1
+    txt = _rand(2, (1, cfg.text_len, cfg.text_d_model))
+    noise = _rand(3, (1, cfg.video_tokens, patch_dim))
+    return dit, cfg, params, z, txt, noise
+
+
+def test_ddim_sample_dispatch_parity():
+    dit, cfg, params, z, txt, noise = _wan_setup()
+    sample = functools.partial(dit.ddim_sample, params, z, txt, cfg, None,
+                               noise=noise)
+    off = sample(use_pallas="off")
+    on = sample(use_pallas="on")
+    scale = float(jnp.abs(off).max())
+    err = float(jnp.abs(on - off).max())
+    assert err <= 1e-5 * max(scale, 1.0), (err, scale)
+    if jax.default_backend() not in COMPILED_BACKENDS:
+        # on CPU the default dispatch is the reference path: the pipeline's
+        # output must stay byte-identical to the seed's inline sampler
+        default = sample()
+        assert np.array_equal(np.asarray(default), np.asarray(off))
+
+
+def test_text_encoder_parity_under_process_override():
+    # encode_text has no use_pallas plumbing of its own — the process-wide
+    # override must flip its attention layers through the kernel path
+    from repro.configs.wan_i2v import SMALL
+    from repro.models.aigc import text_encoder as te
+    from repro.models.param import init_tree
+
+    params = init_tree(jax.random.PRNGKey(0), te.abstract_params(SMALL))
+    toks = jnp.asarray(np.arange(2 * SMALL.text_len).reshape(2, -1)
+                       % SMALL.text_vocab, jnp.int32)
+    with L.pallas_override(False):
+        off = te.encode_text(params, toks, SMALL)
+    with L.pallas_override(True):
+        on = te.encode_text(params, toks, SMALL)
+        assert L.last_dispatch("attention_full") == "pallas"
+    np.testing.assert_allclose(np.asarray(on), np.asarray(off),
+                               atol=1e-4, rtol=1e-4)

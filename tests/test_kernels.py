@@ -10,7 +10,10 @@ import pytest
 
 pytestmark = pytest.mark.slow  # JAX-heavy: excluded from the fast tier via -m "not slow"
 
-from repro.kernels.decode_attention import decode_attention
+from repro.kernels.ddim_step import ddim_step
+from repro.kernels.ddim_step.ref import ddim_step_ref
+from repro.kernels.decode_attention import (
+    decode_attention, decode_attention_cache, decode_attention_int8_cache)
 from repro.kernels.decode_attention.ref import decode_attention_ref
 from repro.kernels.flash_attention import flash_attention
 from repro.kernels.flash_attention.ref import attention_ref
@@ -200,6 +203,103 @@ def test_quantize_kv_roundtrip_error_bounded():
     deq = q.astype(jnp.float32) * s.transpose(0, 2, 1)[..., None]
     rel = float(jnp.max(jnp.abs(deq - x)) / jnp.max(jnp.abs(x)))
     assert rel < 1.0 / 64  # absmax int8: error <= scale/2 ~ absmax/254
+
+
+# ----------------------------------------- serving-layout cache kernels
+@pytest.mark.parametrize("s,h,kv,d,cur", [
+    (512, 4, 2, 64, 511),
+    (384, 8, 8, 64, 100),
+    (100, 2, 1, 32, 63),     # non-block-multiple cache length
+])
+def test_decode_attention_cache_layout(s, h, kv, d, cur):
+    """[B,KV,S,hd] serving-layout kernel == [B,S,KV,hd] oracle (no relayout
+    on the decode hot path)."""
+    b = 2
+    q = rand(0, (b, h, d), jnp.float32)
+    kc = rand(1, (b, s, kv, d), jnp.float32)
+    vc = rand(2, (b, s, kv, d), jnp.float32)
+    out = decode_attention_cache(q, kc.transpose(0, 2, 1, 3),
+                                 vc.transpose(0, 2, 1, 3), jnp.int32(cur))
+    ref = decode_attention_ref(q, kc, vc, jnp.int32(cur))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+@pytest.mark.parametrize("s,cur", [(512, 511), (100, 42)])
+def test_decode_attention_int8_cache_layout(s, cur):
+    """Fused int8-dequant kernel on the serving layout == oracle on the
+    materialized dequantized cache (scales folded, never materialized)."""
+    from repro.kernels.decode_attention.ops import quantize_kv
+
+    b, h, kv, d = 2, 4, 2, 64
+    q = rand(0, (b, h, d), jnp.float32)
+    kc = rand(1, (b, s, kv, d), jnp.float32)
+    vc = rand(2, (b, s, kv, d), jnp.float32)
+    k_q, k_s = quantize_kv(kc)          # int8 [B,S,KV,hd], scales [B,KV,S]
+    v_q, v_s = quantize_kv(vc)
+    out = decode_attention_int8_cache(
+        q, k_q.transpose(0, 2, 1, 3), v_q.transpose(0, 2, 1, 3),
+        k_s, v_s, jnp.int32(cur))
+    deq_k = k_q.astype(jnp.float32) * k_s.transpose(0, 2, 1)[..., None]
+    deq_v = v_q.astype(jnp.float32) * v_s.transpose(0, 2, 1)[..., None]
+    ref = decode_attention_ref(q, deq_k, deq_v, jnp.int32(cur))
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-4, rtol=1e-4)
+
+
+# --------------------------------------------- non-block-multiple shapes
+def test_flash_attention_non_block_multiple_causal():
+    b, s, h, kv, d = 2, 80, 4, 2, 32    # 80 is not a multiple of any block
+    q = rand(0, (b, s, h, d), jnp.float32)
+    k = rand(1, (b, s, kv, d), jnp.float32)
+    v = rand(2, (b, s, kv, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=True)
+    ref = attention_ref(q, jnp.repeat(k, h // kv, 2), jnp.repeat(v, h // kv, 2),
+                        causal=True)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_cross_shape_non_causal():
+    # encoder-decoder cross attention: Sq != Sk, neither block-aligned
+    b, sq, sk, h, d = 1, 80, 33, 2, 32
+    q = rand(0, (b, sq, h, d), jnp.float32)
+    k = rand(1, (b, sk, h, d), jnp.float32)
+    v = rand(2, (b, sk, h, d), jnp.float32)
+    out = flash_attention(q, k, v, causal=False)
+    ref = attention_ref(q, k, v, causal=False)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=2e-5, rtol=2e-5)
+
+
+def test_flash_attention_causal_cross_shape_raises():
+    q = rand(0, (1, 64, 2, 32), jnp.float32)
+    k = rand(1, (1, 32, 2, 32), jnp.float32)
+    with pytest.raises(ValueError):
+        flash_attention(q, k, k, causal=True)
+
+
+# ------------------------------------------------------------ ddim step
+@pytest.mark.parametrize("shape", [(4096,), (2, 1000, 16), (3, 7, 5)])
+@pytest.mark.parametrize("a_t,a_p", [(0.7, 0.9), (0.02, 0.05), (0.98, 1.0)])
+def test_ddim_step_matches_seed_math(shape, a_t, a_p):
+    x = rand(0, shape, jnp.float32)
+    eps = rand(1, shape, jnp.float32)
+    out = ddim_step(x, eps, a_t, a_p)
+    ref = ddim_step_ref(x, eps, a_t, a_p)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
+    assert out.shape == shape
+
+
+def test_ddim_step_traced_alphas():
+    # alphas arrive as traced scalars inside the sampling scan
+    x = rand(0, (512,), jnp.float32)
+    eps = rand(1, (512,), jnp.float32)
+    out = jax.jit(ddim_step)(x, eps, jnp.float32(0.6), jnp.float32(0.8))
+    ref = ddim_step_ref(x, eps, 0.6, 0.8)
+    np.testing.assert_allclose(np.asarray(out), np.asarray(ref),
+                               atol=1e-5, rtol=1e-5)
 
 
 if HAVE_HYPOTHESIS:
