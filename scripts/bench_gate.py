@@ -51,6 +51,22 @@ RATIO_GATES = [
     ("e2e_onepiece_req_s", "e2e_onepiece_unbatched_req_s", 1.0),
 ]
 
+#: --disagg within-run gates (docs/disaggregation.md): for every LLM
+#: config the continuous-batched disaggregated arm must beat both its
+#: own unbatched config (the PR5 0.86x regression, fixed for real) and
+#: the monolithic ServingEngine.  Rows are us_per_call, so LOWER is
+#: better — these are latency ratios with the roles flipped.
+DISAGG_CONFIGS = ("qwen3", "gemma3", "rwkv6")
+DISAGG_RATIO_GATES = [
+    (f"disagg_measured_batched_{c}_req_s",
+     f"disagg_measured_unbatched_{c}_req_s", 1.0)
+    for c in DISAGG_CONFIGS
+] + [
+    (f"disagg_measured_batched_{c}_req_s",
+     f"disagg_measured_mono_{c}_req_s", 1.0)
+    for c in DISAGG_CONFIGS
+]
+
 
 def throughput_of(bench_json: dict, metric: str) -> float:
     for row in bench_json.get("rows", []):
@@ -139,8 +155,17 @@ def main() -> int:
                          "kernel-parity floor (dispatch=pallas, "
                          "max_err <= tol on every kernel_* row)")
     ap.add_argument("--skip-e2e", action="store_true",
-                    help="skip the throughput floor + ratio gates "
-                         "(kernel floor only; requires --kernels)")
+                    help="skip the e2e throughput floor + ratio gates "
+                         "(use with --kernels or --disagg to run those "
+                         "checks standalone)")
+    ap.add_argument("--disagg", action="store_true",
+                    help="run the disaggregation suite and check the "
+                         "measured LLM rows: batched >= unbatched and "
+                         ">= monolithic per config (within-run), plus a "
+                         "floor on the batched qwen3 row vs "
+                         "--disagg-baseline")
+    ap.add_argument("--disagg-baseline",
+                    default=str(REPO / "BENCH_PR10.json"))
     args = ap.parse_args()
 
     failed = False
@@ -172,6 +197,43 @@ def main() -> int:
                     print(f"bench_gate: FAIL — {num} must be >= "
                           f"{min_ratio:.2f}x {den}")
                     failed = True
+
+    if args.disagg:
+        # reuse --fresh if it already carries disagg rows, else run fresh
+        dfresh = None
+        if args.fresh:
+            dump = json.loads(pathlib.Path(args.fresh).read_text())
+            if any(r.get("name", "").startswith("disagg_measured_batched_")
+                   for r in dump.get("rows", [])):
+                dfresh = dump
+        if dfresh is None:
+            dfresh = run_fresh("disaggregation")
+        for num, den, min_ratio in DISAGG_RATIO_GATES:
+            n, d = throughput_of(dfresh, num), throughput_of(dfresh, den)
+            ratio = n / d if d else float("inf")
+            print(f"bench_gate: {num} / {den}: "
+                  f"{n:.2f}/s / {d:.2f}/s = {ratio:.2f}x "
+                  f"(min {min_ratio:.2f}x)")
+            if ratio < min_ratio:
+                print(f"bench_gate: FAIL — {num} must be >= "
+                      f"{min_ratio:.2f}x {den}")
+                failed = True
+        metric = "disagg_measured_batched_qwen3_req_s"
+        base_path = pathlib.Path(args.disagg_baseline)
+        if base_path.exists():
+            b = throughput_of(json.loads(base_path.read_text()), metric)
+            f = throughput_of(dfresh, metric)
+            floor = b * (1.0 - args.tolerance)
+            print(f"bench_gate: {metric}: baseline {b:.2f}/s, "
+                  f"fresh {f:.2f}/s ({(f-b)/b*100:+.1f}%), "
+                  f"floor {floor:.2f}/s")
+            if f < floor:
+                print(f"bench_gate: FAIL — regressed more than "
+                      f"{args.tolerance * 100:.0f}%")
+                failed = True
+        else:
+            print(f"bench_gate: no disagg baseline at {base_path} "
+                  "(floor skipped; ratio gates still apply)")
 
     if args.kernels:
         # reuse --fresh if it already has kernel rows, else run the suite

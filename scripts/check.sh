@@ -7,6 +7,8 @@
 #   scripts/check.sh --bench  # bench gate: fresh e2e run vs BENCH_PR7.json
 #   scripts/check.sh --kernels # kernel tier: parity suites + kernel floor
 #                              # (CPU-fast via interpret mode; docs/kernels.md)
+#   scripts/check.sh --disagg # disaggregation tier: prefill/decode tests +
+#                             # measured-row gate (docs/disaggregation.md)
 # Extra args after the mode flag are passed through to pytest (or to
 # scripts/bench_gate.py in --bench mode).
 set -euo pipefail
@@ -20,7 +22,17 @@ case "${1:-}" in
     --lint) mode=lint; shift ;;
     --bench) mode=bench; shift ;;
     --kernels) mode=kernels; shift ;;
+    --disagg) mode=disagg; shift ;;
 esac
+
+if [ "$mode" = "disagg" ]; then
+    echo "== disagg tier: pytest tests/test_disaggregation.py tests/test_serving_engine.py =="
+    python -m pytest -q --durations=10 \
+        tests/test_disaggregation.py tests/test_serving_engine.py "$@"
+    echo "== disagg tier: python scripts/bench_gate.py --disagg --skip-e2e =="
+    python scripts/bench_gate.py --disagg --skip-e2e
+    exit 0
+fi
 
 if [ "$mode" = "kernels" ]; then
     echo "== kernel tier: pytest tests/test_kernels.py tests/test_kernel_dispatch.py =="

@@ -38,14 +38,16 @@ import time
 from dataclasses import dataclass, field
 from typing import Any, Callable, Dict, List, Optional
 
+from repro.analysis.runtime import make_lock
 from repro.cluster.database import ReplicatedDatabase
 from repro.cluster.join import JOIN_DEAD, JOIN_PENDING, JoinTable
 from repro.cluster.node_manager import NodeManager
 from repro.core.batching import Coalescer, bucket_key, stack_payloads, unstack_payload
-from repro.core.messaging import WorkflowMessage
+from repro.core.messaging import KVPages, WorkflowMessage
 from repro.core.profiling import profiler
 from repro.core.rdma import RdmaFabric
 from repro.core.ring_buffer import CORRUPT, DoubleRingBuffer
+from repro.core.streaming import DEFERRED, is_continuous
 from repro.core.transport import ChannelStats, Router
 
 _DROP = object()  # per-message failure sentinel inside a batch result
@@ -188,6 +190,14 @@ class ResultDeliver:
                     m.stage = idx
             else:
                 out = [msgs[i].for_stage(idx) for i in live]
+            # KV-cache shipments ride the wire ledger: a silent drop of a
+            # bulk writev surfaces only as an undecodable corrupt entry at
+            # the consumer, so the sender records the UID first and the
+            # receiver settles at unpack (§9 stays per-request exact).
+            if self.joins is not None:
+                for m in out:
+                    if isinstance(m.payload, KVPages):
+                        self.joins.track_wire(m.uid_hex)
             n = self._send_edge(hops, out, (app_id, succ))
             for i in live[n:]:
                 ok[i] = False
@@ -322,6 +332,13 @@ class WorkflowInstance:
         # Per-topology-epoch (app_id, stage_idx) -> (stage name, fn | None)
         # cache — same exactness argument as ResultDeliver._routes.
         self._stage_cache: tuple = (-1, {})
+        # Continuous-stage protocol (repro.core.streaming): messages a
+        # continuous stage fn absorbed (returned DEFERRED for) — parked
+        # under their UID until a scheduler tick emits their result, and
+        # accounted as dropped if the instance drains first.  Written by
+        # whichever thread ran the stage fn, read by the scheduler pump.
+        self._deferred: Dict[str, WorkflowMessage] = {}  # guarded_by: _cont_lock
+        self._cont_lock = make_lock("WorkflowInstance._cont_lock")
         self._threads: List[threading.Thread] = []
         self._stage: Optional[str] = None
         self._version = -1
@@ -396,6 +413,23 @@ class WorkflowInstance:
                     self.rd.mark_dropped(WorkflowMessage.unpack(item).uid_hex)
                 except Exception:
                     pass
+        # Requests a continuous stage absorbed but never finished: release
+        # their slots and tombstone them — a parked decode request must end
+        # up in dead_uids(), never silently stranded in a slot (§9).
+        with self._cont_lock:
+            leftover = list(self._deferred.items())
+            self._deferred.clear()
+        abandoned: set = set()
+        for uid, m in leftover:
+            fn = self._stage_callable(m)
+            if fn is not None and is_continuous(fn) and id(fn) not in abandoned:
+                abandoned.add(id(fn))
+                try:
+                    fn.abandon()
+                except Exception:
+                    pass
+            self.stats.dropped += 1
+            self.rd.mark_dropped(uid)
 
     # ------------------------------------------------------------ manager
     def _refresh_assignment(self) -> None:
@@ -457,9 +491,13 @@ class WorkflowInstance:
                 self.stats.dropped += 1
                 continue
             try:
-                msgs.append(WorkflowMessage.unpack(item))
+                m = WorkflowMessage.unpack(item)
             except Exception:
                 self.stats.dropped += 1
+                continue
+            if isinstance(m.payload, KVPages) and self.rd.joins is not None:
+                self.rd.joins.settle_wire(m.uid_hex)
+            msgs.append(m)
 
     def _apply_reassignment(self, coalescer: Coalescer) -> None:
         """Adopt a pending reassignment (scheduler thread only).
@@ -515,6 +553,56 @@ class WorkflowInstance:
         self._doorbell.wait(timeout)
         self._doorbell.clear()
 
+    def _pump_continuous(self) -> bool:
+        """Tick every continuous stage fn holding parked messages: one tick
+        runs one decode segment and may complete requests, whose results
+        are delivered here under their original message identity.  Returns
+        True while any fn still has work in flight — the scheduler must
+        then keep alternating poll/tick (each inbox poll between ticks IS
+        the token-boundary admission window) instead of parking."""
+        with self._cont_lock:
+            if not self._deferred:
+                return False
+            parked = dict(self._deferred)
+        by_fn: Dict[int, tuple] = {}
+        for uid, m in parked.items():
+            fn = self._stage_callable(m)
+            if fn is None or not is_continuous(fn):
+                # stage vanished from the topology: the parked request can
+                # never complete — account it, never strand it silently
+                with self._cont_lock:
+                    if self._deferred.pop(uid, None) is not None:
+                        self.stats.dropped += 1
+                        self.rd.mark_dropped(uid)
+                continue
+            by_fn.setdefault(id(fn), (fn, []))[1].append(uid)
+        pending = False
+        for fn, uids in by_fn.values():
+            t0 = time.monotonic()
+            try:
+                done = fn.tick()
+            except Exception:
+                # a dying decode batch: abandon every resident request of
+                # this fn with §9 accounting rather than kill the scheduler
+                try:
+                    fn.abandon()
+                except Exception:
+                    pass
+                done = [(u, _DROP) for u in uids]
+            self.stats.busy_s += time.monotonic() - t0
+            for uid, result in done:
+                with self._cont_lock:
+                    m = self._deferred.pop(uid, None)
+                if m is None:
+                    continue  # already accounted (drain/reassign race)
+                self._deliver_results([m], [result])
+            try:
+                if fn.pending() > 0:
+                    pending = True
+            except Exception:
+                pass
+        return pending
+
     def _scheduler_loop(self) -> None:
         coalescer = Coalescer(max_batch=self.max_batch, max_wait_s=self.max_wait_s)
         # max_batch=1 instances bypass the coalescer entirely: no bucket
@@ -523,8 +611,11 @@ class WorkflowInstance:
         prof = profiler()
         while not self._stop.is_set():
             self._apply_reassignment(coalescer)
+            cont_busy = self._pump_continuous()
             item = self.inbox.poll()
             if item is None:
+                if cont_busy:
+                    continue  # slots still decoding: tick again, don't park
                 if bypass:
                     self._wait_for_traffic(self._idle_wait_s)
                     continue
@@ -552,6 +643,8 @@ class WorkflowInstance:
             except Exception:
                 self.stats.dropped += 1
                 continue
+            if isinstance(msg.payload, KVPages) and self.rd.joins is not None:
+                self.rd.joins.settle_wire(msg.uid_hex)  # KV ship arrived
             if prof.enabled:
                 prof.stamp(msg.uid_hex, msg.stage, "dequeue")
             if bypass:
@@ -631,6 +724,17 @@ class WorkflowInstance:
         counted in ``solo_fallbacks`` so a silently-degraded "batched"
         deployment is visible in the stats.  Per-message failures yield
         the _DROP sentinel."""
+        if is_continuous(fn):
+            # Continuous stages absorb per message (the admission side of
+            # the protocol) and typically return DEFERRED; their real
+            # results surface later through the scheduler pump.
+            results = []
+            for m in msgs:
+                try:
+                    results.append(fn(m.payload, uid=m.uid_hex))
+                except Exception:
+                    results.append(_DROP)
+            return results
         sizes = None
         try:
             payload, sizes = self._stack_batch(msgs)
@@ -685,7 +789,14 @@ class WorkflowInstance:
             if r is _DROP:
                 self.stats.dropped += 1
                 self.rd.mark_dropped(m.uid_hex)
-        pairs = [(m, r) for m, r in zip(msgs, results) if r is not _DROP]
+            elif r is DEFERRED:
+                # absorbed by a continuous stage: park under the UID (not
+                # processed yet — the pump delivers and counts it later)
+                with self._cont_lock:
+                    self._deferred[m.uid_hex] = m
+                self._doorbell.set()  # wake a parked scheduler to pump
+        pairs = [(m, r) for m, r in zip(msgs, results)
+                 if r is not _DROP and r is not DEFERRED]
         self.stats.processed += len(pairs)
         if not pairs:
             return

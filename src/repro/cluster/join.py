@@ -22,6 +22,15 @@ per-request: every submitted UID is either stored (exactly one joined
 result) or in ``dropped_uids``; ``pending_uids`` exposes the remainder for
 reconciliation after a quiesce.
 
+The table also carries the **wire ledger** for tracked shipments
+(docs/disaggregation.md): a bulk single-dep transfer whose loss the
+receiver can only see as a checksum-failed ring entry — a corrupt entry
+decodes no UID — is ``track_wire``'d by the sender before the append and
+``settle_wire``'d by the receiver at unpack.  A shipment that never
+settles stays in ``pending_uids`` (reconciled as dead after a quiesce)
+and is tombstoned by the TTL sweep, so even a silently dropped KV-cache
+ship keeps ``submitted == stored ∪ dead_uids()``.
+
 State is bounded like the transient database's: stranded partials (their
 sibling was lost with no decodable UID) and tombstones both expire after
 ``ttl_s`` via a lazy sweep, so a long-running set cannot leak joins.
@@ -68,6 +77,7 @@ class JoinStats:
     discarded_partials: int = 0
     expired_joins: int = 0      # stranded joins evicted by the TTL sweep
     expired_tombstones: int = 0
+    expired_shipments: int = 0  # tracked wire transfers never settled
     db_write_failures: int = 0  # partial mirror writes that found no replica
 
 
@@ -102,6 +112,8 @@ class JoinTable:
         #: ``dropped_snapshot()`` — the raw set mutates under you.
         self.dropped_uids: Set[str] = set()  # guarded_by: _lock
         self._dropped_at: Dict[str, float] = {}  # guarded_by: _lock
+        #: wire ledger — tracked bulk shipments awaiting receiver settle
+        self._wire: Dict[str, float] = {}  # guarded_by: _lock
         self._last_sweep = clock()
         self.stats = JoinStats()  # guarded_by: _lock
 
@@ -165,6 +177,14 @@ class JoinTable:
             del self._dropped_at[uid]
             self.dropped_uids.discard(uid)
             self.stats.expired_tombstones += 1
+        # Wire-ledger expiry tombstones (rather than forgets): a shipment
+        # that never settled is a *known* drop — keep the §9 invariant
+        # even after the pending window closes.
+        for uid in [u for u, t in self._wire.items() if now - t > self.ttl_s]:
+            del self._wire[uid]
+            self.dropped_uids.add(uid)
+            self._dropped_at[uid] = now
+            self.stats.expired_shipments += 1
 
     # --------------------------------------------------------------- offers
     def offer(self, app_id: int, stage_idx: int, uid_hex: str, branch: str,
@@ -242,6 +262,7 @@ class JoinTable:
             first = uid_hex not in self.dropped_uids
             self.dropped_uids.add(uid_hex)
             self._dropped_at[uid_hex] = self.clock()
+            self._wire.pop(uid_hex, None)  # a dead request owes no settle
             for key in [k for k in self._pending if k[2] == uid_hex]:
                 parts = self._pending.pop(key)
                 del self._pending_at[key]
@@ -249,6 +270,25 @@ class JoinTable:
                 self.stats.discarded_partials += len(parts)
                 self._purge_mirror(key, parts)
         return first
+
+    # ------------------------------------------------------------ wire ledger
+    def track_wire(self, uid_hex: str) -> None:
+        """Sender side: record a bulk shipment (e.g. a KV-cache ship)
+        whose silent wire loss the receiver could only observe as a
+        corrupt ring entry with no decodable UID.  Until the receiver
+        settles it, the UID counts as pending (→ dead after a quiesce)."""
+        with self._lock:
+            if uid_hex not in self.dropped_uids:
+                self._wire.setdefault(uid_hex, self.clock())
+
+    def settle_wire(self, uid_hex: str) -> None:
+        """Receiver side: the tracked shipment arrived intact."""
+        with self._lock:
+            self._wire.pop(uid_hex, None)
+
+    def wire_pending(self) -> int:
+        with self._lock:
+            return len(self._wire)
 
     # ------------------------------------------------------------- queries
     def dropped_snapshot(self) -> Set[str]:
@@ -258,11 +298,12 @@ class JoinTable:
             return set(self.dropped_uids)
 
     def pending_uids(self) -> Set[str]:
-        """UIDs with at least one partial still waiting — after a quiesce
-        these are requests a lost sibling branch stranded (reconciled as
+        """UIDs with at least one partial still waiting, plus tracked wire
+        shipments not yet settled — after a quiesce these are requests a
+        lost sibling branch or a dropped shipment stranded (reconciled as
         drops by ``WorkflowSet.dead_uids``)."""
         with self._lock:
-            return {k[2] for k in self._pending}
+            return {k[2] for k in self._pending} | set(self._wire)
 
     def pending_joins(self) -> int:
         with self._lock:

@@ -159,6 +159,17 @@ class Proxy:
             self.complete()
         return v
 
+    def poll_partial(self, uid: str) -> Optional[Any]:
+        """Token-boundary streaming (docs/disaggregation.md): a continuous
+        decode stage publishes each request's tokens-so-far under
+        ``partial/<uid>`` after every scan segment.  Reads are
+        non-destructive (``scan``, not ``fetch``) so repeated polls watch
+        the prefix grow; the final result still arrives only through
+        ``poll_result``/``wait_result``, and completion purges the partial
+        key.  Returns None before the first segment and after completion."""
+        hits = self.database.scan(f"partial/{uid}")
+        return hits.get(f"partial/{uid}")
+
     def wait_result(self, uid: str, timeout_s: float = 10.0,
                     interval_s: float = 0.002) -> Any:
         """Event-driven result wait: parks on the database's store doorbell

@@ -18,7 +18,7 @@ from repro.core.batching import (
 )
 from repro.core.rdma import CostModel, FabricStats, MemoryRegion, RdmaFabric, SimulatedCrash, TcpCostModel
 from repro.core.ring_buffer import CORRUPT, AppendOp, Corrupt, DoubleRingBuffer, RingProducer
-from repro.core.messaging import HEADER_BYTES, WorkflowMessage
+from repro.core.messaging import HEADER_BYTES, KVPages, WorkflowMessage
 from repro.core.transport import Channel, ChannelStats, Router
 from repro.core.pipeline_planner import (
     critical_path,
@@ -57,6 +57,7 @@ __all__ = [
     "RingProducer",
     "SimulatedCrash",
     "TcpCostModel",
+    "KVPages",
     "WorkflowMessage",
     "bucket_key",
     "critical_path",

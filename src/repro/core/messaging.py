@@ -25,11 +25,35 @@ Payload = Union[bytes, np.ndarray, Dict[str, Any], List[Any], Tuple[Any, ...], s
 _KIND_BYTES = 0
 _KIND_TENSOR = 1
 _KIND_JSONTREE = 2
+_KIND_KVPAGES = 3
 
 _KEEP = object()  # for_stage default: carry this message's payload unchanged
 
 
 Buf = Union[bytes, bytearray, memoryview]
+
+
+@dataclass
+class KVPages:
+    """A prefilled request's KV cache as an ordered page list (§KV-ship,
+    docs/disaggregation.md).
+
+    ``pages`` holds the cache tree's leaves in ``jax.tree`` flatten order —
+    one page per leaf, each a B=1 slice along that leaf's batch axis.
+    ``meta`` is the JSON-safe decode plan riding along (prompt tokens,
+    start index, steps, temperature, seed).  The wire form is one gather
+    list — header, meta blob, then each page's raw bytes behind a ``<Q>``
+    length — so a whole cache ships as ONE ``RdmaFabric.writev`` with no
+    Python-side concatenation, and decodes back to zero-copy views over
+    the ring slot.
+    """
+
+    meta: Dict[str, Any]
+    pages: List[np.ndarray] = field(default_factory=list)
+
+    @property
+    def nbytes(self) -> int:
+        return sum(p.nbytes for p in self.pages)
 
 
 def _tensor_view(x: np.ndarray) -> Buf:
@@ -53,6 +77,19 @@ def _encode_payload_parts(payload: Payload) -> List[Buf]:
         meta = json.dumps({"dtype": payload.dtype.str, "shape": payload.shape}).encode()
         return [struct.pack("<BI", _KIND_TENSOR, len(meta)), meta,
                 _tensor_view(payload)]
+    if isinstance(payload, KVPages):
+        pages = [np.asarray(p) for p in payload.pages]
+        meta = json.dumps({
+            "meta": payload.meta,
+            "pages": [{"dtype": p.dtype.str, "shape": list(p.shape)}
+                      for p in pages]}).encode()
+        parts: List[Buf] = [
+            struct.pack("<BII", _KIND_KVPAGES, len(meta), len(pages)), meta]
+        for p in pages:
+            view = _tensor_view(p)
+            parts.append(struct.pack("<Q", len(view)))
+            parts.append(view)
+        return parts
     # generic pytree: JSON skeleton with tensor leaves hoisted to a blob list
     blobs: List[memoryview] = []
 
@@ -121,6 +158,20 @@ def _decode_payload(raw: Buf) -> Payload:
             return x
 
         return lower(skel)
+    if kind == _KIND_KVPAGES:
+        mlen, npages = struct.unpack_from("<II", mv, 1)
+        off = 9
+        head = json.loads(bytes(mv[off : off + mlen]))
+        off += mlen
+        pages = []
+        for spec in head["pages"]:
+            (blen,) = struct.unpack_from("<Q", mv, off)
+            off += 8
+            pages.append(np.frombuffer(
+                mv[off : off + blen],
+                dtype=np.dtype(spec["dtype"])).reshape(spec["shape"]))
+            off += blen
+        return KVPages(meta=head["meta"], pages=pages)
     raise ValueError(f"bad payload kind {kind}")
 
 

@@ -32,7 +32,7 @@ from dataclasses import dataclass, field
 from typing import Dict, Hashable, List, Optional, Sequence
 
 from repro.analysis.runtime import make_lock
-from repro.core.messaging import WorkflowMessage
+from repro.core.messaging import KVPages, WorkflowMessage
 from repro.core.profiling import profiler
 from repro.core.ring_buffer import DoubleRingBuffer, PartsLike, RingProducer
 
@@ -44,6 +44,11 @@ class ChannelStats:
     retries: int = 0
     bytes_sent: int = 0
     batches: int = 0
+    # KV-page shipments (the prefill->decode edge of llm_disagg,
+    # docs/disaggregation.md): messages whose payload is a KVPages cache
+    # shipment, and the raw cache bytes inside them
+    kv_pages: int = 0
+    kv_bytes: int = 0
     # per-lock-name contention stats (repro.analysis.runtime.LockStats
     # dicts); populated by WorkflowSet.transport_stats() when the suite
     # runs with lock instrumentation, {} otherwise
@@ -60,6 +65,8 @@ class ChannelStats:
             retries=self.retries + other.retries,
             bytes_sent=self.bytes_sent + other.bytes_sent,
             batches=self.batches + other.batches,
+            kv_pages=self.kv_pages + other.kv_pages,
+            kv_bytes=self.kv_bytes + other.kv_bytes,
             lock_stats={**self.lock_stats, **other.lock_stats},
             latency={**self.latency, **other.latency},
         )
@@ -114,6 +121,10 @@ class Channel:
     def send(self, msg: WorkflowMessage) -> bool:
         ok = self.send_parts(msg.pack_parts())
         if ok:
+            if isinstance(msg.payload, KVPages):
+                with self._lock:
+                    self.stats.kv_pages += 1
+                    self.stats.kv_bytes += msg.payload.nbytes
             prof = profiler()
             if prof.enabled:
                 prof.stamp(msg.uid_hex, msg.stage, "enqueue")
@@ -137,12 +148,16 @@ class Channel:
             retries += 1
             time.sleep(self.retry_interval_s)
         nbytes = sum(sum(len(x) for x in p) for p in parts[:done])
+        kv = [m.payload for m in msgs[:done]
+              if isinstance(m.payload, KVPages)]
         with self._lock:
             self.stats.batches += 1
             self.stats.retries += retries
             self.stats.sent += done
             self.stats.dropped += len(parts) - done
             self.stats.bytes_sent += nbytes
+            self.stats.kv_pages += len(kv)
+            self.stats.kv_bytes += sum(p.nbytes for p in kv)
         prof = profiler()
         if prof.enabled:
             t = time.monotonic()

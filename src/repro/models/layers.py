@@ -313,7 +313,8 @@ def attention_decode(
 ) -> jax.Array:
     b, h, d = q.shape
     kvh = k_cache.shape[1]
-    if resolve_use_pallas(use_pallas) and window == 0:
+    vector_index = jnp.ndim(cur_index) > 0  # per-row positions (slot serving)
+    if (resolve_use_pallas(use_pallas) and window == 0 and not vector_index):
         from repro.kernels import decode_attention_cache
 
         _record("attention_decode", "pallas")
@@ -323,10 +324,16 @@ def attention_decode(
     qg = q.reshape(b, kvh, g, d) * (d ** -0.5)
     sc = jnp.einsum("bngd,bntd->bngt", qg, k_cache).astype(jnp.float32)
     pos = jnp.arange(k_cache.shape[2])
-    valid = pos <= cur_index
-    if window:
-        valid &= pos > cur_index - window
-    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    if vector_index:
+        valid = pos[None, :] <= cur_index[:, None]  # [B, Smax]
+        if window:
+            valid &= pos[None, :] > cur_index[:, None] - window
+        sc = jnp.where(valid[:, None, None, :], sc, NEG_INF)
+    else:
+        valid = pos <= cur_index
+        if window:
+            valid &= pos > cur_index - window
+        sc = jnp.where(valid[None, None, None], sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     out = jnp.einsum("bngt,bntd->bngd", pr, v_cache)
     return out.reshape(b, h, d).astype(q.dtype)
@@ -356,7 +363,8 @@ def attention_decode_int8(
     HBM traffic is 1/2 of bf16 / 1/4 of f32 caches (§Perf pair C)."""
     b, h, d = q.shape
     kvh = k_q.shape[1]
-    if resolve_use_pallas(use_pallas):
+    vector_index = jnp.ndim(cur_index) > 0
+    if resolve_use_pallas(use_pallas) and not vector_index:
         from repro.kernels import decode_attention_int8_cache
 
         _record("attention_decode_int8", "pallas")
@@ -367,7 +375,11 @@ def attention_decode_int8(
     sc = jnp.einsum("bngd,bntd->bngt", qg, k_q.astype(jnp.float32))
     sc = sc * k_s[:, :, None, :]
     pos = jnp.arange(k_q.shape[2])
-    sc = jnp.where((pos <= cur_index)[None, None, None], sc, NEG_INF)
+    if vector_index:
+        sc = jnp.where((pos[None, :] <= cur_index[:, None])[:, None, None, :],
+                       sc, NEG_INF)
+    else:
+        sc = jnp.where((pos <= cur_index)[None, None, None], sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1)
     pv = pr * v_s[:, :, None, :]
     out = jnp.einsum("bngt,bntd->bngd", pv, v_q.astype(jnp.float32))
@@ -387,9 +399,14 @@ def attention_decode_ring(
     qg = q.reshape(b, kvh, g, d) * (d ** -0.5)
     sc = jnp.einsum("bngd,bntd->bngt", qg, k_cache).astype(jnp.float32)
     slots = jnp.arange(w)
-    abs_pos = cur_index - ((cur_index - slots) % w)
-    valid = abs_pos >= 0  # ring always spans (cur-W, cur]
-    sc = jnp.where(valid[None, None, None], sc, NEG_INF)
+    if jnp.ndim(cur_index) > 0:  # per-row positions: [B,1] vs [W] -> [B,W]
+        ci = cur_index[:, None]
+        abs_pos = ci - ((ci - slots[None, :]) % w)
+        sc = jnp.where((abs_pos >= 0)[:, None, None, :], sc, NEG_INF)
+    else:
+        abs_pos = cur_index - ((cur_index - slots) % w)
+        valid = abs_pos >= 0  # ring always spans (cur-W, cur]
+        sc = jnp.where(valid[None, None, None], sc, NEG_INF)
     pr = jax.nn.softmax(sc, axis=-1).astype(q.dtype)
     out = jnp.einsum("bngt,bntd->bngd", pr, v_cache)
     return out.reshape(b, h, d).astype(q.dtype)

@@ -170,7 +170,10 @@ def _shared_block(x, sp, cfg: ModelConfig, mode, cache, cur_index):
 
     s = x.shape[1]
     if mode == "decode":
-        positions = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
+        if jnp.ndim(cur_index) > 0:  # per-row positions [B] -> [B,1]
+            positions = jnp.asarray(cur_index, jnp.int32)[:, None]
+        else:
+            positions = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
     else:
         positions = jnp.arange(s)[None, :].repeat(x.shape[0], 0)
     sincos = _sincos(cfg, positions)

@@ -140,16 +140,28 @@ def _attention(x, lp, cfg: ModelConfig, mode, sincos, window, cache, cur_index):
     # the Pallas kernels are forward-only; train always runs the reference
     up = "off" if mode == "train" else cfg.use_pallas
     if mode == "decode":
-        # cache layout [B, KV, S, hd]: GEMM-ready per head, no relayout
+        # cache layout [B, KV, S, hd]: GEMM-ready per head, no relayout.
+        # cur_index may be a scalar (lockstep batch) or a [B] vector —
+        # per-slot positions for continuous-batching serving; vector slots
+        # scatter one token per row instead of one shared column.
         slot = (cur_index % window) if window else cur_index
+        vec = jnp.ndim(cur_index) > 0
+
+        def put(cache_leaf, token_leaf):
+            # token_leaf [B,KV,1,...]; write row b at column slot[b] (vec)
+            # or every row at the shared scalar column.
+            if vec:
+                bi = jnp.arange(cache_leaf.shape[0])
+                return cache_leaf.at[bi, :, slot].set(token_leaf[:, :, 0])
+            return jax.lax.dynamic_update_slice_in_dim(
+                cache_leaf, token_leaf, slot, 2)
+
         if int8_cache:
             ck, cv, ks, vs = cache
             k1, ksc = L.quantize_token_kv(k[:, 0][:, :, None])
             v1, vsc = L.quantize_token_kv(v[:, 0][:, :, None])
-            ck = jax.lax.dynamic_update_slice_in_dim(ck, k1, slot, 2)
-            cv = jax.lax.dynamic_update_slice_in_dim(cv, v1, slot, 2)
-            ks = jax.lax.dynamic_update_slice_in_dim(ks, ksc, slot, 2)
-            vs = jax.lax.dynamic_update_slice_in_dim(vs, vsc, slot, 2)
+            ck, cv = put(ck, k1), put(cv, v1)
+            ks, vs = put(ks, ksc), put(vs, vsc)
             assert not window, "int8 ring cache not implemented"
             att = L.attention_decode_int8(q[:, 0], ck, cv, ks, vs, cur_index,
                                           use_pallas=up)[:, None]
@@ -158,8 +170,7 @@ def _attention(x, lp, cfg: ModelConfig, mode, sincos, window, cache, cur_index):
             ck, cv = cache
             k1 = k[:, 0][:, :, None].astype(cd)  # [B,KV,1,hd]
             v1 = v[:, 0][:, :, None].astype(cd)
-            ck = jax.lax.dynamic_update_slice_in_dim(ck, k1, slot, 2)
-            cv = jax.lax.dynamic_update_slice_in_dim(cv, v1, slot, 2)
+            ck, cv = put(ck, k1), put(cv, v1)
             if window:
                 att = L.attention_decode_ring(q[:, 0], ck, cv, cur_index)[:, None]
             else:
@@ -235,7 +246,10 @@ def _stack_forward(
     """Apply the full layer stack. Returns (hidden, new_cache, aux_sum)."""
     s = x.shape[1]
     if mode == "decode":
-        positions = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
+        if jnp.ndim(cur_index) > 0:  # per-row positions [B] -> [B,1]
+            positions = jnp.asarray(cur_index, jnp.int32)[:, None]
+        else:
+            positions = jnp.full((x.shape[0], 1), cur_index, jnp.int32)
     else:
         positions = jnp.arange(s)[None, :].repeat(x.shape[0], 0)
     sincos = _sincos(cfg, positions)

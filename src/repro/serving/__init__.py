@@ -1,3 +1,16 @@
+from repro.serving.disagg import (
+    APP_LLM_DISAGG,
+    ContinuousDecoder,
+    build_llm_disagg_set,
+    make_prefill_fn,
+)
 from repro.serving.engine import GenerationResult, ServingEngine
 
-__all__ = ["GenerationResult", "ServingEngine"]
+__all__ = [
+    "APP_LLM_DISAGG",
+    "ContinuousDecoder",
+    "GenerationResult",
+    "ServingEngine",
+    "build_llm_disagg_set",
+    "make_prefill_fn",
+]

@@ -16,12 +16,35 @@ full-length KV caches are masked by ``cur_index``; ring (sliding-window)
 caches hold position ``t`` at slot ``t % w`` and a prompt shorter than the
 window lays tokens out at ``t`` identically before and after padding;
 recurrent states (rwkv/mamba) are already O(1)-sized and pass through.
+
+RNG contract (docs/disaggregation.md)
+-------------------------------------
+Sampling must be *batch-composition independent*: the token sequence a
+request produces may depend only on ``(seed, row, step)``, never on which
+other requests share its batch.  Row ``b`` of decode step ``i`` samples
+with ``fold_in(fold_in(PRNGKey(seed), b), i)`` through a per-row (vmapped)
+categorical — a batched ``categorical(key, [B, V])`` draws Gumbel noise
+whose layout depends on B, which is exactly the coupling continuous
+batching cannot tolerate.  ``generate``, ``generate_reference``, and the
+slot-based continuous decoder all share this derivation, which is what
+makes scan-vs-loop parity hold at ``temperature > 0`` and lets a request
+entering a half-full slot batch emit tokens bit-identical to a solo run.
+
+Disaggregated serving (docs/disaggregation.md)
+----------------------------------------------
+``prefill``/``init_slots``/``insert_slot``/``decode_segment``/
+``release_slot`` split generation into the two workflow stages of the
+``llm_disagg`` DAG: prefill produces a per-request cache (batch axis per
+leaf from the ``abstract_cache`` ParamSpec logical names) that ships over
+the fabric as KV pages; decode holds a ``max_slots``-wide slot cache where
+requests join and leave at segment boundaries with per-slot ``cur_index``
+vectors and active masks.
 """
 from __future__ import annotations
 
 import dataclasses
 import functools
-from typing import Dict
+from typing import Any, Dict
 
 import jax
 import jax.numpy as jnp
@@ -39,6 +62,31 @@ class GenerationResult:
     steps: int
 
 
+def _row_base_keys(seed, rows: int):
+    """[rows, 2] uint32 — per-row sampling streams for one batch seed."""
+    base = jax.random.PRNGKey(seed)
+    return jax.vmap(lambda r: jax.random.fold_in(base, r))(jnp.arange(rows))
+
+
+def _sample_rows(logits, step_keys, temperature):
+    """Per-row categorical over [B, V] logits.  ``temperature`` is either a
+    static float (generate paths) or a per-row [B] f32 vector (slot decode);
+    a static t > 0 and a vector entry t compute the same f32 division, so
+    the two paths sample bit-identically."""
+    greedy = jnp.argmax(logits, axis=-1)
+    if isinstance(temperature, (int, float)):
+        if temperature <= 0:
+            return greedy
+        t = jnp.float32(temperature)
+        return jax.vmap(
+            lambda k, lg: jax.random.categorical(k, lg / t))(step_keys, logits)
+    t = jnp.maximum(temperature.astype(jnp.float32), jnp.float32(1e-6))
+    sampled = jax.vmap(
+        lambda k, lg, tt: jax.random.categorical(k, lg / tt))(
+        step_keys, logits, t)
+    return jnp.where(temperature > 0, sampled, greedy)
+
+
 class ServingEngine:
     def __init__(self, cfg: ModelConfig, params=None, *, max_len: int = 256,
                  seed: int = 0, use_pallas: str | None = None):
@@ -51,6 +99,14 @@ class ServingEngine:
 
         cfgs = cfg
         max_len_s = max_len
+
+        # Per-leaf batch-axis map: every family's abstract_cache ParamSpec
+        # names its batch dim "batch", but at a different position per leaf
+        # (stacked-layer leading dims, gemma3 period dims) — this tree is
+        # what lets slot insert/extract address any leaf uniformly.
+        spec1 = registry.abstract_cache(cfg, 1, max_len)
+        self._batch_axes = jax.tree.map(
+            lambda s: s.logical.index("batch"), spec1, is_leaf=is_spec)
 
         @jax.jit
         def prefill_fn(params, batch):
@@ -79,20 +135,20 @@ class ServingEngine:
                 cfgs, dropless=True)
 
         @functools.partial(jax.jit, static_argnames=("steps", "temperature"))
-        def decode_loop_fn(params, cache, logits, start, rng, *, steps,
+        def decode_loop_fn(params, cache, logits, start, seed, *, steps,
                            temperature):
             """The whole generation as one on-device scan: sample from the
             carried logits, run one decode step, repeat.  Token i lands at
-            position start+i; one host sync fetches the [B, steps] block."""
-            keys = jax.random.split(rng, steps)
+            position start+i; one host sync fetches the [B, steps] block.
+            Row b of step i samples with fold_in(fold_in(key(seed), b), i)
+            — see the module RNG contract."""
+            row_keys = _row_base_keys(seed, logits.shape[0])
 
-            def body(carry, key):
+            def body(carry, i):
                 logits, cache, idx = carry
-                if temperature > 0:
-                    tok = jax.random.categorical(
-                        key, logits / temperature, axis=-1)
-                else:
-                    tok = jnp.argmax(logits, axis=-1)
+                step_keys = jax.vmap(
+                    lambda k: jax.random.fold_in(k, i))(row_keys)
+                tok = _sample_rows(logits, step_keys, temperature)
                 tok = jnp.minimum(tok, cfgs.vocab_size - 1).astype(jnp.int32)
                 logits, cache = registry.decode_step(
                     params, cache, {"tokens": tok, "cur_index": idx},
@@ -100,12 +156,72 @@ class ServingEngine:
                 return (logits, cache, idx + 1), tok
 
             (logits, cache, _), toks = jax.lax.scan(
-                body, (logits, cache, jnp.int32(start)), keys)
+                body, (logits, cache, jnp.int32(start)), jnp.arange(steps))
             return jnp.transpose(toks), logits  # [B, steps]
+
+        def insert_fn(state, cache1, logits1, slot, start, seed, rem, temp):
+            """Graft one prefilled request into slot ``slot``: overwrite the
+            slot's cache row (per-leaf batch axis), seed its sampling stream
+            (row 0 of its own seed — identical to a solo B=1 run), and arm
+            the per-slot counters."""
+            cache = jax.tree.map(
+                lambda big, small, ax: jax.lax.dynamic_update_slice_in_dim(
+                    big, jnp.asarray(small, big.dtype), slot, axis=ax),
+                state["cache"], cache1, self._batch_axes)
+            key = jax.random.fold_in(jax.random.PRNGKey(seed), 0)
+            return {
+                "cache": cache,
+                "logits": state["logits"].at[slot].set(logits1),
+                "cur_index": state["cur_index"].at[slot].set(start),
+                "step": state["step"].at[slot].set(0),
+                "remaining": state["remaining"].at[slot].set(rem),
+                "keys": state["keys"].at[slot].set(key),
+                "temp": state["temp"].at[slot].set(temp),
+                "active": state["active"].at[slot].set(True),
+            }
+
+        @functools.partial(jax.jit, static_argnames=("k",))
+        def segment_fn(params, state, *, k):
+            """k decode steps over the whole slot batch.  Slots advance only
+            while active with budget remaining; the rest decode masked-out
+            garbage (row-independent math, overwritten at next insert).
+            Returns (state', toks [k, N], advanced-mask [k, N])."""
+
+            def body(carry, _):
+                logits, cache, cur, step, rem, keys, temp, active = carry
+                step_keys = jax.vmap(jax.random.fold_in)(keys, step)
+                tok = _sample_rows(logits, step_keys, temp)
+                tok = jnp.minimum(tok, cfgs.vocab_size - 1).astype(jnp.int32)
+                adv = active & (rem > 0)
+                new_logits, cache = registry.decode_step(
+                    params, cache, {"tokens": tok, "cur_index": cur},
+                    cfgs, dropless=True)
+                logits = jnp.where(adv[:, None], new_logits, logits)
+                ai = adv.astype(jnp.int32)
+                carry = (logits, cache, cur + ai, step + ai, rem - ai,
+                         keys, temp, active)
+                return carry, (tok, adv)
+
+            carry = (state["logits"], state["cache"], state["cur_index"],
+                     state["step"], state["remaining"], state["keys"],
+                     state["temp"], state["active"])
+            carry, (toks, adv) = jax.lax.scan(body, carry, None, length=k)
+            logits, cache, cur, step, rem, keys, temp, active = carry
+            state = dict(state, logits=logits, cache=cache, cur_index=cur,
+                         step=step, remaining=rem)
+            return state, toks, adv
+
+        @jax.jit
+        def release_fn(state, slot):
+            return dict(state, active=state["active"].at[slot].set(False),
+                        remaining=state["remaining"].at[slot].set(0))
 
         self._prefill = prefill_fn
         self._decode = decode_fn
         self._decode_loop = decode_loop_fn
+        self._insert = jax.jit(insert_fn)
+        self._segment = segment_fn
+        self._release = release_fn
 
     def _fresh_cache(self, batch: int):
         spec = registry.abstract_cache(self.cfg, batch, self.max_len)
@@ -128,6 +244,63 @@ class ServingEngine:
                 jnp.dtype(self.cfg.dtype))
         return batch
 
+    # ------------------------------------------------- disaggregated stages
+    def prefill(self, prompts: np.ndarray):
+        """The prefill *stage*: [B, P] prompts -> (logits [B, V], cache tree
+        in the padded max_len decode layout).  The cache's per-leaf batch
+        axes (``batch_axes``) are what the KV-ship path slices per request."""
+        return self._prefill(self.params, self._prefill_batch(prompts))
+
+    @property
+    def batch_axes(self):
+        """Tree (matching the cache tree) of each leaf's batch-axis index."""
+        return self._batch_axes
+
+    def init_slots(self, max_slots: int) -> Dict[str, Any]:
+        """Fresh continuous-batching decode state: a ``max_slots``-wide slot
+        cache plus per-slot sampling/progress vectors, all inactive."""
+        if self.cfg.family == "audio":
+            raise NotImplementedError(
+                "continuous batching needs the uniform abstract_cache layout; "
+                "the audio enc-dec cache is built per request")
+        spec = registry.abstract_cache(self.cfg, max_slots, self.max_len)
+        cache = jax.tree.map(lambda s: jnp.zeros(s.shape, jnp.dtype(s.dtype)),
+                             spec, is_leaf=is_spec)
+        n, v = max_slots, self.cfg.vocab_padded
+        return {
+            "cache": cache,
+            "logits": jnp.zeros((n, v), jnp.float32),
+            "cur_index": jnp.zeros((n,), jnp.int32),
+            "step": jnp.zeros((n,), jnp.int32),
+            "remaining": jnp.zeros((n,), jnp.int32),
+            "keys": jnp.zeros((n, 2), jnp.uint32),
+            "temp": jnp.zeros((n,), jnp.float32),
+            "active": jnp.zeros((n,), bool),
+        }
+
+    def insert_slot(self, state, slot: int, cache1, logits1, *, start: int,
+                    seed: int, steps: int, temperature: float):
+        """Join: land a prefilled request (B=1 cache leaves + last-token
+        logits [V]) in slot ``slot`` at a segment boundary."""
+        return self._insert(state, cache1, jnp.asarray(logits1),
+                            jnp.int32(slot), jnp.int32(start),
+                            jnp.int32(seed), jnp.int32(steps),
+                            jnp.float32(temperature))
+
+    def decode_segment(self, state, k: int):
+        """Run ``k`` lockstep decode steps over the slot batch.  Returns
+        (state', tokens [k, N] np.int32, advanced [k, N] np.bool_): column
+        s of ``tokens`` holds the next min(k, remaining) tokens of the
+        request in slot s, rows where ``advanced`` is set."""
+        state, toks, adv = self._segment(self.params, state, k=k)
+        return state, np.asarray(toks), np.asarray(adv)
+
+    def release_slot(self, state, slot: int):
+        """Leave: free a slot at a segment boundary (cache row stays as
+        garbage until the next insert overwrites it)."""
+        return self._release(state, jnp.int32(slot))
+
+    # ------------------------------------------------------ monolithic path
     def generate(self, prompts: np.ndarray, *, steps: int = 16,
                  temperature: float = 0.0, seed: int = 0) -> GenerationResult:
         """prompts: [B, P] int32.  One jitted prefill consumes the prompt,
@@ -137,7 +310,7 @@ class ServingEngine:
         assert p + steps <= self.max_len
         logits, cache = self._prefill(self.params, self._prefill_batch(prompts))
         toks, _ = self._decode_loop(
-            self.params, cache, logits, jnp.int32(p), jax.random.PRNGKey(seed),
+            self.params, cache, logits, jnp.int32(p), jnp.int32(seed),
             steps=steps, temperature=float(temperature))
         tokens = np.concatenate([prompts, np.asarray(toks)], axis=1)
         return GenerationResult(tokens=tokens, prompt_len=p, steps=steps)
@@ -147,11 +320,12 @@ class ServingEngine:
                            seed: int = 0) -> GenerationResult:
         """The seed's token-at-a-time loop (teacher-forced prompt, one host
         sync per decode step).  Kept as the parity/benchmark baseline for
-        the scan path — not a serving path."""
+        the scan path — not a serving path.  Shares the (seed, row, step)
+        key derivation with ``generate`` so parity holds at temperature > 0."""
         b, p = prompts.shape
         assert p + steps <= self.max_len
         cache = self._fresh_cache(b)
-        rng = jax.random.PRNGKey(seed)
+        row_keys = _row_base_keys(seed, b)
 
         logits = None
         for t in range(p):
@@ -159,11 +333,9 @@ class ServingEngine:
                                          jnp.asarray(prompts[:, t]), jnp.int32(t))
         out = [prompts]
         for i in range(steps):
-            if temperature > 0:
-                rng, k = jax.random.split(rng)
-                cur = jax.random.categorical(k, logits / temperature, axis=-1)
-            else:
-                cur = jnp.argmax(logits, axis=-1)
+            step_keys = jax.vmap(
+                lambda k: jax.random.fold_in(k, i))(row_keys)  # noqa: B023
+            cur = _sample_rows(logits, step_keys, float(temperature))
             cur = jnp.minimum(cur, self.cfg.vocab_size - 1).astype(jnp.int32)
             out.append(np.asarray(cur)[:, None])
             logits, cache = self._decode(self.params, cache, cur,
